@@ -1,0 +1,102 @@
+"""Roofline report: three terms per (arch x shape x mesh) from the dry-run.
+
+Reads results/dryrun.json (written by launch/dryrun.py, optionally with
+--costs unit-extrapolated numbers) and emits the SSRoofline table:
+
+    compute    = FLOPs_dev / peak_FLOPs          (197 TF/s bf16, v5e)
+    memory     = HBM_bytes_dev / HBM_bw          (819 GB/s)
+    collective = wire_bytes_dev / ICI_bw         (50 GB/s/link)
+
+All inputs are *per-device* (the compiled module is the per-device SPMD
+program).  MODEL_FLOPS uses the 6*N*D convention (N = params, active params
+for MoE; D = tokens) split across devices, so the useful-compute ratio
+MODEL_FLOPS / HLO_FLOPs exposes remat/dispatch overhead.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+# active params (B) for MODEL_FLOPS; dense = total params
+ACTIVE_PARAMS = {
+    "zamba2-1.2b": 1.18e9,
+    "minicpm-2b": 2.73e9,
+    "qwen3-4b": 4.41e9,
+    "qwen2-0.5b": 0.49e9,
+    "qwen3-14b": 14.8e9,
+    "pixtral-12b": 12.2e9,
+    "xlstm-1.3b": 1.95e9,
+    "grok-1-314b": 86e9,          # top-2 of 8 experts + attn/embed
+    "qwen3-moe-30b-a3b": 3.3e9,   # top-8 of 128 (the A3B in the name)
+    "whisper-tiny": 0.041e9,
+}
+
+TOKENS = {"train_4k": 256 * 4096, "prefill_32k": 32 * 32768,
+          "decode_32k": 128, "long_500k": 1}
+TRAIN_MULT = {"train": 3.0, "prefill": 1.0, "decode": 1.0}
+SHAPE_KIND = {"train_4k": "train", "prefill_32k": "prefill",
+              "decode_32k": "decode", "long_500k": "decode"}
+
+
+def model_flops_per_device(arch: str, shape: str, n_devices: int) -> float:
+    """6*N*D per step (x1 fwd-only for serving), split across devices."""
+    kind = SHAPE_KIND[shape]
+    mult = 2.0 * TRAIN_MULT[kind]  # 2ND fwd (+4ND bwd for train)
+    return mult * ACTIVE_PARAMS[arch] * TOKENS[shape] / n_devices
+
+
+def terms(rec: dict) -> dict | None:
+    costs = rec.get("costs")
+    if costs is None:
+        return None
+    nd = rec.get("n_devices", 256)
+    ct = costs["flops"] / PEAK_FLOPS
+    mt = costs["hbm_bytes"] / HBM_BW
+    lt = costs["wire_bytes"] / ICI_BW
+    dom = max(("compute", ct), ("memory", mt), ("collective", lt),
+              key=lambda kv: kv[1])[0]
+    mf = model_flops_per_device(rec["arch"], rec["shape"], nd)
+    return {
+        "compute_s": ct, "memory_s": mt, "collective_s": lt,
+        "bottleneck": dom,
+        "model_flops": mf,
+        "useful_ratio": mf / costs["flops"] if costs["flops"] else 0.0,
+        "roofline_s": max(ct, mt, lt),
+        "ideal_s": max(mf / PEAK_FLOPS, 0.0),
+        "roofline_fraction": (
+            (mf / PEAK_FLOPS) / max(ct, mt, lt) if max(ct, mt, lt) else 0.0
+        ),
+    }
+
+
+def rows(path: str = "results/dryrun.json") -> list[tuple[str, float, str]]:
+    if not os.path.exists(path):
+        return [("roofline.missing", 0.0, f"run launch/dryrun.py --costs ({path})")]
+    with open(path) as f:
+        recs = json.load(f)
+    out = []
+    for r in sorted(recs, key=lambda r: (r["mesh"], r["arch"], r["shape"])):
+        name = f"roofline.{r['mesh']}.{r['arch']}.{r['shape']}"
+        if r.get("status") == "skipped":
+            out.append((name, 0.0, "skipped:" + r.get("reason", "")[:40]))
+            continue
+        if r.get("status") != "ok":
+            out.append((name, 0.0, "ERROR"))
+            continue
+        t = terms(r)
+        if t is None:
+            out.append((name, 0.0, "compiled_ok(no --costs)"))
+            continue
+        out.append((
+            name,
+            t["roofline_s"] * 1e6,
+            f"bound={t['bottleneck']};C={t['compute_s']:.2e};"
+            f"M={t['memory_s']:.2e};L={t['collective_s']:.2e};"
+            f"useful={t['useful_ratio']:.2f};"
+            f"roofline_frac={t['roofline_fraction']:.2f}",
+        ))
+    return out

@@ -1,0 +1,20 @@
+"""Benchmark driver: one section per paper table/figure + the roofline
+report.  Prints ``name,us_per_call,derived`` CSV (assignment convention)."""
+from __future__ import annotations
+
+
+def main() -> None:
+    from benchmarks import moe_skew, paper_figures, roofline
+
+    print("name,us_per_call,derived")
+    for fn in paper_figures.ALL:
+        for name, us, derived in fn():
+            print(f"{name},{us:.2f},{derived}")
+    for name, us, derived in moe_skew.rows():
+        print(f"{name},{us:.2f},{derived}")
+    for name, us, derived in roofline.rows():
+        print(f"{name},{us:.2f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Quickstart: the paper's technique in 60 seconds.
+
+1. Diagnose a controller-aliasing conflict with the analytic model,
+2. fix it with the closed-form skew plan (no trial and error),
+3. run the Pallas vector-triad kernel under the chosen layout,
+4. apply the same policy to an LM config for a 16-wide TP mesh.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax.numpy as jnp
+
+from repro.core.aliasing import InterleavedMemoryModel, Stream
+from repro.core.autotune import StreamSignature, plan_streams
+from repro.core.layout import LayoutPolicy
+from repro.configs import get_config
+from repro.kernels.triad import ops as triad_ops
+from repro.kernels.triad import ref as triad_ref
+
+
+def main() -> None:
+    model = InterleavedMemoryModel()  # T2: 4 controllers, addr bits 8:7
+    print("== 1. diagnose ==")
+    aligned = [Stream(0, "write")] + [Stream(0, "read")] * 3
+    print(f"all arrays page-aligned: balance = "
+          f"{model.balance(aligned):.2f}  (the paper's 4x collapse)")
+
+    print("== 2. analytic fix ==")
+    plan = plan_streams(StreamSignature(n_read=3, n_write=1), model)
+    print(f"closed-form offsets: {plan.offsets_bytes} bytes "
+          f"-> balance {plan.predicted_balance:.2f} "
+          f"(paper: 128/256/384)")
+
+    print("== 3. kernel under the layout ==")
+    n = 100_000
+    b = jnp.linspace(0, 1, n)
+    c = jnp.linspace(1, 2, n)
+    d = jnp.linspace(2, 3, n)
+    phases = tuple(o // 8 for o in plan.offsets_bytes[1:])
+    out = triad_ops.vector_triad_phased(b, c, d, phases=phases)
+    err = float(jnp.max(jnp.abs(out - triad_ref.triad(b, c, d))))
+    print(f"pallas triad (skewed layout) max err vs oracle: {err:.1e}")
+
+    print("== 4. the same policy, one level up ==")
+    cfg = get_config("minicpm-2b")
+    padded, changes = cfg.padded_for_mesh(tp=16)
+    for name, (lo, hi) in changes.items():
+        print(f"  {name}: {lo} -> {hi} "
+              f"(waste {(hi - lo) / hi:.1%}, shard-aligned for 16-way TP)")
+    pol = LayoutPolicy(tp=16)
+    print(f"  vocab shard: {padded.vocab_size // 16} "
+          f"(= {padded.vocab_size // 16 // 128} x 128 lanes)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Serving example: continuous batching over the serve_step decode path.
+
+Ragged requests stream through a fixed set of decode slots (vLLM-style);
+per-slot cache indices keep co-resident requests independent -- including
+SSM state resets when a slot is re-tenanted (zamba2 is stateful).
+
+Run:  PYTHONPATH=src python examples/serve_batched.py
+"""
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config, reduce_for_smoke
+from repro.models import build_model
+from repro.serving import ContinuousBatcher, Request
+
+
+def main() -> None:
+    cfg = dataclasses.replace(reduce_for_smoke(get_config("zamba2-1.2b")),
+                              n_layers=6, d_model=256, vocab_size=2048)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    rng = np.random.default_rng(0)
+    reqs = [
+        Request(rid=i,
+                prompt=rng.integers(1, cfg.vocab_size, size=8 + 4 * i).tolist(),
+                max_new_tokens=12 + 2 * i)
+        for i in range(6)
+    ]
+    total_prompt = sum(len(r.prompt) for r in reqs)
+    total_gen = sum(r.max_new_tokens for r in reqs)
+
+    batcher = ContinuousBatcher(model, params, slots=3, max_len=96)
+    t0 = time.time()
+    out = batcher.run(reqs)
+    dt = time.time() - t0
+    print(f"{len(reqs)} ragged requests through 3 slots: "
+          f"{batcher.ticks} ticks, {dt:.2f}s "
+          f"({(total_prompt + total_gen) / dt:.1f} tok/s aggregate)")
+    naive_ticks = sum(len(r.prompt) + r.max_new_tokens - 1 for r in reqs)
+    print(f"slot reuse saved {naive_ticks - batcher.ticks} ticks vs "
+          f"one-request-at-a-time ({batcher.ticks}/{naive_ticks})")
+    for rid in sorted(out):
+        print(f"  request {rid}: {len(out[rid])} tokens, "
+              f"first 6 = {out[rid][:6]}")
+    assert len(out) == len(reqs)
+
+
+if __name__ == "__main__":
+    main()

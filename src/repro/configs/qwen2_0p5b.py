@@ -1,0 +1,16 @@
+"""qwen2-0.5b [dense]: GQA with QKV bias. [arXiv:2407.10671; hf]
+24L d_model=896 14H(kv=2) d_ff=4864 vocab=151936.  The pool's worst
+mesh-misfit: 14 heads / 2 kv heads on a 16-wide model axis (layout-policy
+showcase: head padding)."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-0.5b", family="dense",
+    n_layers=24, d_model=896, n_heads=14, n_kv_heads=2,
+    d_ff=4864, vocab_size=151936,
+    qkv_bias=True, tie_embeddings=True, rope_theta=1_000_000.0,
+    # analytic TP-vs-ZeRO rule (DESIGN.md SS7): 3*params/layer (0.12 GB)
+    # < TP-AR traffic (0.44 GB) at 0.5B params -> ZeRO-3 for train
+    parallelism="zero3",
+)
+SCHEDULE = "cosine"

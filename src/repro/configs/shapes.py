@@ -1,0 +1,79 @@
+"""Assigned input-shape sets and abstract input specs.
+
+Every LM architecture is paired with the four standard cells:
+
+    train_4k     seq 4096,   global batch 256   (train_step)
+    prefill_32k  seq 32768,  global batch 32    (prefill_step)
+    decode_32k   cache 32768, global batch 128  (serve_step: 1 new token)
+    long_500k    cache 524288, global batch 1   (serve_step; sub-quadratic
+                                                 families only, per assignment)
+
+``input_specs`` returns ShapeDtypeStruct stand-ins (weak-type-correct,
+shardable, zero allocation) for every model input of a given (arch, shape)
+cell -- the dry-run lowers against these directly.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import build_model
+from repro.models.config import ModelConfig
+from repro.models.params import abstract_params
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str          # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES: dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", "train", 4_096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32_768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524_288, 1),
+}
+
+
+def shape_applicable(cfg: ModelConfig, shape: ShapeSpec) -> tuple[bool, str]:
+    """Assignment rules: long_500k only for sub-quadratic families."""
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, "long_500k skipped: pure full-attention arch (see DESIGN.md)"
+    return True, ""
+
+
+def _i32(*shape) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    """Abstract model inputs for one cell (excluding params/cache)."""
+    b, s = shape.global_batch, shape.seq_len
+    dt = cfg.adtype
+    if shape.kind in ("train", "prefill"):
+        if cfg.family == "encdec":
+            return {
+                "tokens": _i32(b, s),
+                "labels": _i32(b, s),
+                "frames": jax.ShapeDtypeStruct((b, cfg.n_frames, cfg.d_model), dt),
+            }
+        batch: dict = {"tokens": _i32(b, s), "labels": _i32(b, s)}
+        if cfg.family == "vlm":
+            text = max(s - cfg.n_img_tokens, 1)
+            batch = {
+                "tokens": _i32(b, text),
+                "labels": _i32(b, text),
+                "img_embeds": jax.ShapeDtypeStruct(
+                    (b, cfg.n_img_tokens, cfg.d_model), dt
+                ),
+            }
+        return batch
+    # decode: one new token against a seq_len-deep cache
+    model = build_model(cfg)
+    cache = abstract_params(model.cache_defs(b, s))
+    return {"tokens": _i32(b, 1), "cache": cache}

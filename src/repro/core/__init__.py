@@ -1,0 +1,13 @@
+"""Core: the paper's contribution (analytic data-layout optimization),
+generalized for TPU. See DESIGN.md SS2-3."""
+from repro.core.aliasing import InterleavedMemoryModel, Stream, analytic_skews
+from repro.core.autotune import LayoutPlan, StreamSignature, plan_streams
+from repro.core.layout import LANES, SUBLANES, LayoutPolicy, PaddedDim, round_up
+from repro.core.segmented import SegmentedArray, seg_map, seg_triad
+
+__all__ = [
+    "InterleavedMemoryModel", "Stream", "analytic_skews",
+    "LayoutPlan", "StreamSignature", "plan_streams",
+    "LANES", "SUBLANES", "LayoutPolicy", "PaddedDim", "round_up",
+    "SegmentedArray", "seg_map", "seg_triad",
+]

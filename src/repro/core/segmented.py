@@ -1,0 +1,166 @@
+"""Segmented arrays: the paper's segmented container + iterators, in JAX.
+
+The paper splits each array into per-thread segments, aligns every segment to
+a controller-period boundary, then shifts segment ``t`` by ``t * shift``
+bytes so concurrent threads land on different memory controllers; STL-style
+*segmented iterators* keep the inner loops at plain-C speed (Fig. 5 shows
+zero overhead).
+
+The JAX port: a ``SegmentedArray`` is a pytree of per-segment blocks.  Each
+segment has a *logical* length and a *physical* (padded) length; the pad is
+the alignment analogue (on TPU it keeps every segment lane/sublane aligned so
+per-segment kernels and per-device shards never see ragged tails).  The
+"shift" survives as ``phase``: a per-segment element offset into the physical
+block, so segment k's data starts at a different lane phase -- exactly the
+paper's skew, re-targeted at the (8,128) tile instead of the 512 B period.
+
+``seg_map`` is the segmented-iterator equivalent: it applies a flat kernel
+per segment (unrolled, static segment count) -- under ``jit`` XLA fuses the
+per-segment calls, and the overhead benchmark (benchmarks/segmented_overhead)
+reproduces the paper's Fig. 5 "negligible overhead" claim.
+"""
+from __future__ import annotations
+
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.layout import round_up
+
+
+def split_lengths(n: int, n_segments: int) -> list[int]:
+    """Paper's manual schedule: floor(N/t)+1 for the first N%t segments."""
+    if n_segments <= 0:
+        raise ValueError("n_segments must be positive")
+    base, rem = divmod(n, n_segments)
+    return [base + 1 if s < rem else base for s in range(n_segments)]
+
+
+@jax.tree_util.register_pytree_node_class
+class SegmentedArray:
+    """1-D array stored as padded, phase-shifted segments.
+
+    segments[k] has physical length P_k; the logical data of segment k lives
+    at segments[k][phase_k : phase_k + L_k].  All structural metadata is
+    static (hashable aux data) so SegmentedArray traces cleanly under jit.
+    """
+
+    def __init__(
+        self,
+        segments: Sequence[jax.Array],
+        lengths: Sequence[int],
+        phases: Sequence[int],
+    ):
+        if not (len(segments) == len(lengths) == len(phases)):
+            raise ValueError("segments/lengths/phases must align")
+        for seg, L, p in zip(segments, lengths, phases):
+            if hasattr(seg, "ndim") and seg.ndim != 1:
+                raise ValueError("segments must be 1-D")
+        self.segments = tuple(segments)
+        self.lengths = tuple(int(x) for x in lengths)
+        self.phases = tuple(int(x) for x in phases)
+
+    # ---- pytree protocol -------------------------------------------------
+    def tree_flatten(self):
+        return self.segments, (self.lengths, self.phases)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        lengths, phases = aux
+        return cls(children, lengths, phases)
+
+    # ---- construction ----------------------------------------------------
+    @classmethod
+    def from_flat(
+        cls,
+        x: jax.Array,
+        n_segments: int,
+        *,
+        align: int = 128,
+        shift: int = 0,
+    ) -> "SegmentedArray":
+        """Split ``x`` into near-equal segments; pad each physical block to a
+        multiple of ``align`` elements; give segment k a phase of
+        ``(k * shift) % align`` elements (the paper's per-segment skew).
+        """
+        (n,) = x.shape
+        lengths = split_lengths(n, n_segments)
+        phases = [(k * shift) % align if align else 0 for k in range(n_segments)]
+        segs = []
+        start = 0
+        for L, p in zip(lengths, phases):
+            phys = round_up(p + L, align) if align else p + L
+            block = jnp.zeros((phys,), dtype=x.dtype)
+            block = jax.lax.dynamic_update_slice(block, x[start : start + L], (p,))
+            segs.append(block)
+            start += L
+        return cls(segs, lengths, phases)
+
+    def to_flat(self) -> jax.Array:
+        """Concatenate the logical contents (inverse of from_flat)."""
+        parts = [
+            jax.lax.dynamic_slice(seg, (p,), (L,))
+            for seg, L, p in zip(self.segments, self.lengths, self.phases)
+        ]
+        return jnp.concatenate(parts) if parts else jnp.zeros((0,))
+
+    # ---- metadata ----------------------------------------------------------
+    @property
+    def n_segments(self) -> int:
+        return len(self.segments)
+
+    @property
+    def logical_size(self) -> int:
+        return sum(self.lengths)
+
+    @property
+    def physical_size(self) -> int:
+        return sum(int(np.prod(s.shape)) for s in self.segments)
+
+    @property
+    def waste(self) -> float:
+        ps = self.physical_size
+        return (ps - self.logical_size) / ps if ps else 0.0
+
+    def like(self, segments: Sequence[jax.Array]) -> "SegmentedArray":
+        return SegmentedArray(segments, self.lengths, self.phases)
+
+    # ---- segmented "iterators" --------------------------------------------
+    def seg_view(self, k: int) -> jax.Array:
+        """Logical view of segment k (a dynamic slice -- jit friendly)."""
+        return jax.lax.dynamic_slice(
+            self.segments[k], (self.phases[k],), (self.lengths[k],)
+        )
+
+
+def seg_map(
+    fn: Callable[..., jax.Array],
+    out: SegmentedArray,
+    *ins: SegmentedArray,
+) -> SegmentedArray:
+    """Apply ``fn(*segment_views) -> segment`` per segment (the generic
+    dispatching algorithm of the paper's ``triad()``).
+
+    ``fn`` receives the *logical* views of each input segment and must return
+    the new logical content for the output segment; the padded physical block
+    and phase are preserved.  The loop is a static unroll: at trace time it
+    becomes n_segments independent fused kernels, which is exactly the
+    paper's "compile the serial kernel separately" trick.
+    """
+    for a in ins:
+        if a.lengths != out.lengths:
+            raise ValueError("segment length mismatch between operands")
+    new_segments = []
+    for k in range(out.n_segments):
+        res = fn(*(a.seg_view(k) for a in ins))
+        blk = jax.lax.dynamic_update_slice(out.segments[k], res, (out.phases[k],))
+        new_segments.append(blk)
+    return out.like(new_segments)
+
+
+def seg_triad(a: SegmentedArray, b: SegmentedArray, c: SegmentedArray,
+              d: SegmentedArray) -> SegmentedArray:
+    """Segmented Schoenauer vector triad A = B + C * D (paper SS2.2)."""
+    return seg_map(lambda bb, cc, dd: bb + cc * dd, a, b, c, d)

@@ -1,0 +1,50 @@
+"""Jacobi wrappers: padding policy + multi-sweep driver."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.layout import LANES, SUBLANES, round_up
+from repro.kernels.jacobi import kernel
+
+
+@jax.jit
+def jacobi_step(src: jax.Array) -> jax.Array:
+    """One aligned Pallas sweep on an (N, M) grid (boundaries copied).
+
+    Layout policy (the paper's SS2.3 parameters, TPU form): columns padded to
+    a 128-lane multiple, interior row count padded to a sublane multiple;
+    the three shifted views give each block its halo without overlap reads.
+    """
+    n, m = src.shape
+    width = round_up(m, LANES)
+    rows = n - 2
+    prow = round_up(rows, SUBLANES)
+    padded = jnp.pad(src, ((0, prow - rows), (0, width - m)))
+    sa = padded[:-2][:prow]
+    sb = padded[2:][:prow]
+    sl = padded[1:-1][:prow]
+    out = kernel.jacobi_rows(sa, sb, sl, n_cols=m)
+    return src.at[1:-1, :].set(out[:rows, :m])
+
+
+@functools.partial(jax.jit, static_argnames=("iters",))
+def jacobi_sweeps(src: jax.Array, iters: int) -> jax.Array:
+    return jax.lax.fori_loop(0, iters, lambda _, x: jacobi_step(x), src)
+
+
+def jacobi_bytes(n: int, m: int, elem_bytes: int = 8, *, rfo: bool = True) -> int:
+    """Per-sweep traffic when two rows fit in cache/VMEM: read each source
+    row once, write each destination row (+RFO) -- 4 (6) B/flop."""
+    sites = (n - 2) * (m - 2)
+    return (3 if rfo else 2) * sites * elem_bytes
+
+
+def jacobi_flops(n: int, m: int) -> int:
+    return 4 * (n - 2) * (m - 2)
+
+
+def mlups(n: int, m: int, seconds: float, iters: int = 1) -> float:
+    return (n - 2) * (m - 2) * iters / seconds / 1e6

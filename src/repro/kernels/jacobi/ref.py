@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the 2-D Jacobi sweep."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def jacobi_step(src: jax.Array) -> jax.Array:
+    """One 5-point sweep; boundary cells are copied through."""
+    inner = (
+        src[:-2, 1:-1] + src[2:, 1:-1] + src[1:-1, :-2] + src[1:-1, 2:]
+    ) * jnp.asarray(0.25, src.dtype)
+    return src.at[1:-1, 1:-1].set(inner)
+
+
+def jacobi_sweeps(src: jax.Array, iters: int) -> jax.Array:
+    return jax.lax.fori_loop(0, iters, lambda _, x: jacobi_step(x), src)

@@ -1,0 +1,40 @@
+"""Jitted wrappers: flatten leading dims, lane-pad the feature dim."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.layout import LANES, SUBLANES, round_up
+from repro.kernels.rmsnorm import kernel
+
+
+def _prep(x: jax.Array):
+    *lead, d = x.shape
+    rows = 1
+    for s in lead:
+        rows *= s
+    x2 = x.reshape(rows, d)
+    wp = round_up(d, LANES)
+    rp = round_up(rows, SUBLANES)
+    x2 = jnp.pad(x2, ((0, rp - rows), (0, wp - d)))
+    return x2, lead, rows, d, wp
+
+
+@functools.partial(jax.jit, static_argnames=("eps",))
+def rmsnorm(x: jax.Array, scale: jax.Array, *, eps: float = 1e-6) -> jax.Array:
+    x2, lead, rows, d, wp = _prep(x)
+    s = jnp.pad(scale, (0, wp - d))
+    y = kernel.rmsnorm2d(x2, s, d_logical=d, eps=eps)
+    return y[:rows, :d].reshape(*lead, d)
+
+
+@functools.partial(jax.jit, static_argnames=("eps",))
+def gated_rmsnorm(x: jax.Array, z: jax.Array, scale: jax.Array, *,
+                  eps: float = 1e-6) -> jax.Array:
+    x2, lead, rows, d, wp = _prep(x)
+    z2 = _prep(z)[0]
+    s = jnp.pad(scale, (0, wp - d))
+    y = kernel.gated_rmsnorm2d(x2, z2, s, d_logical=d, eps=eps)
+    return y[:rows, :d].reshape(*lead, d)

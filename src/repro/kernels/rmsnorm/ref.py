@@ -1,0 +1,21 @@
+"""Pure-jnp oracles for the RMSNorm kernels."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    ms = (xf * xf).mean(-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + eps) * scale.astype(jnp.float32)).astype(
+        x.dtype
+    )
+
+
+def gated_rmsnorm(x: jax.Array, z: jax.Array, scale: jax.Array,
+                  eps: float = 1e-6) -> jax.Array:
+    g = (x.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))).astype(
+        x.dtype
+    )
+    return rmsnorm(g, scale, eps)

@@ -1,0 +1,21 @@
+"""Pure-jnp oracles for the STREAM kernels."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def copy(a: jax.Array) -> jax.Array:
+    return a + 0  # force a materialized copy under jit
+
+
+def scale(c: jax.Array, s: float) -> jax.Array:
+    return jnp.asarray(s, c.dtype) * c
+
+
+def add(a: jax.Array, b: jax.Array) -> jax.Array:
+    return a + b
+
+
+def triad(b: jax.Array, c: jax.Array, s: float) -> jax.Array:
+    return b + jnp.asarray(s, b.dtype) * c

@@ -1,0 +1,77 @@
+"""Vector-triad wrappers: aligned, phased, and segmented variants.
+
+``vector_triad``            -- tile-aligned layout (the optimized case).
+``vector_triad_phased``     -- per-stream element phases, reproducing the
+                               paper's offset experiment: each array lives at
+                               ``phase[k]`` elements into a padded buffer, so
+                               stream k starts at a different lane phase.
+``vector_triad_segmented``  -- SegmentedArray inputs, one Pallas call per
+                               segment (the segmented-iterator port).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.segmented import SegmentedArray, seg_map
+from repro.kernels.triad import kernel
+from repro.kernels.util import from_tiles, to_tiles
+
+
+@functools.partial(jax.jit, static_argnames=("width",))
+def vector_triad(b: jax.Array, c: jax.Array, d: jax.Array, *, width: int = 1024) -> jax.Array:
+    b2, n = to_tiles(b, width)
+    c2, _ = to_tiles(c, width)
+    d2, _ = to_tiles(d, width)
+    return from_tiles(kernel.triad2d(b2, c2, d2), n)
+
+
+@functools.partial(jax.jit, static_argnames=("phases", "width"))
+def vector_triad_phased(
+    b: jax.Array,
+    c: jax.Array,
+    d: jax.Array,
+    *,
+    phases: tuple[int, int, int] = (0, 0, 0),
+    width: int = 1024,
+) -> jax.Array:
+    """Embed stream k at element phase[k]; the kernel then reads shifted
+    views.  With non-tile-multiple phases the compiler must materialize
+    re-alignment copies -- the cost shows up in HLO bytes (see
+    benchmarks/vector_triad.py), which is the dry-run observable for the
+    paper's offset sweep."""
+    (n,) = b.shape
+    outs = []
+    for x, p in zip((b, c, d), phases):
+        buf = jnp.pad(x, (p, 0))  # stream starts p elements in
+        outs.append(buf[p:])      # logical view back at the data
+    b2, n = to_tiles(outs[0], width)
+    c2, _ = to_tiles(outs[1], width)
+    d2, _ = to_tiles(outs[2], width)
+    return from_tiles(kernel.triad2d(b2, c2, d2), n)
+
+
+def vector_triad_segmented(
+    a: SegmentedArray, b: SegmentedArray, c: SegmentedArray, d: SegmentedArray
+) -> SegmentedArray:
+    """Segmented-iterator port: per-segment Pallas triad calls."""
+
+    def _one(bb: jax.Array, cc: jax.Array, dd: jax.Array) -> jax.Array:
+        b2, n = to_tiles(bb, 128)
+        c2, _ = to_tiles(cc, 128)
+        d2, _ = to_tiles(dd, 128)
+        return from_tiles(kernel.triad2d(b2, c2, d2), n)
+
+    return seg_map(_one, a, b, c, d)
+
+
+def triad_bytes(n: int, elem_bytes: int = 8, *, rfo: bool = True) -> int:
+    """Application traffic: 3 reads + 1 write (+1 RFO read) per element --
+    the paper's 16 B/flop balance at 8-byte elements without RFO."""
+    return (5 if rfo else 4) * n * elem_bytes
+
+
+def triad_flops(n: int) -> int:
+    return 2 * n  # one mul + one add per element

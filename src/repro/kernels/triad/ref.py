@@ -1,0 +1,8 @@
+"""Pure-jnp oracle for the vector triad."""
+from __future__ import annotations
+
+import jax
+
+
+def triad(b: jax.Array, c: jax.Array, d: jax.Array) -> jax.Array:
+    return b + c * d

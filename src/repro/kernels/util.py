@@ -1,0 +1,46 @@
+"""Shared helpers for the Pallas benchmark kernels.
+
+All four paper kernels are 1-D/2-D/3-D *streaming* kernels.  On TPU a long
+vector is processed as a (rows, 128k) 2-D array so every DMA moves whole
+(8,128) tiles -- this reshape+pad is itself an instance of the paper's
+alignment rule and is centralized here.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.layout import LANES, SUBLANES, cdiv, round_up
+
+# interpret=True on CPU; real TPUs compile the same kernels natively.
+INTERPRET = jax.default_backend() == "cpu"
+
+
+def to_tiles(x: jax.Array, width: int = 1024) -> tuple[jax.Array, int]:
+    """Reshape a 1-D array to (rows, width), zero-padding the tail.
+
+    ``width`` must be a multiple of 128 lanes; rows are padded to a multiple
+    of 8 sublanes so the result is exactly tileable.  Returns (tiled, n) with
+    n the logical length for the inverse.
+    """
+    if width % LANES:
+        raise ValueError(f"width must be a multiple of {LANES}")
+    (n,) = x.shape
+    rows = round_up(cdiv(max(n, 1), width), SUBLANES)
+    pad = rows * width - n
+    x2 = jnp.pad(x, (0, pad)) if pad else x
+    return x2.reshape(rows, width), n
+
+
+def from_tiles(x2: jax.Array, n: int) -> jax.Array:
+    return x2.reshape(-1)[:n]
+
+
+def block_rows(rows: int, target: int = 256) -> int:
+    """Rows per VMEM block: a sublane multiple that divides the padded rows."""
+    b = min(rows, round_up(target, SUBLANES))
+    while rows % b:
+        b -= SUBLANES
+    return max(b, SUBLANES)

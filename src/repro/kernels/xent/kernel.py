@@ -1,0 +1,76 @@
+"""Tiled cross-entropy kernel (beyond-paper: the loss-layer layout fix of
+EXPERIMENTS.md P0.1 as a TPU kernel).
+
+Online-softmax over vocab tiles: for each (token-block, vocab-block) grid
+cell the kernel folds the tile into running (max, sumexp, label-logit)
+scratch; the final vocab tile emits per-token NLL.  The full (T, V) logits
+row never needs to be resident -- the working set is one (bt, bv) tile,
+exactly the paper's rule of sizing segments to the transfer resource.
+
+Padded vocab columns (layout-policy padding) are masked by index, so the
+kernel is correct for physical vocab > logical vocab.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.util import INTERPRET
+
+
+def _xent_kernel(lab_ref, lg_ref, out_ref, m_ref, l_ref, ll_ref, *,
+                 nv: int, bv: int, logical_v: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref[...], -1e30)
+        l_ref[...] = jnp.zeros_like(l_ref[...])
+        ll_ref[...] = jnp.zeros_like(ll_ref[...])
+
+    x = lg_ref[...].astype(jnp.float32)                    # (bt, bv)
+    col = j * bv + jax.lax.broadcasted_iota(jnp.int32, x.shape, 1)
+    x = jnp.where(col < logical_v, x, -1e30)
+    m_old = m_ref[...]
+    m_new = jnp.maximum(m_old, jnp.max(x, axis=-1))
+    p = jnp.where(x <= -1e29, 0.0, jnp.exp(x - m_new[:, None]))
+    l_ref[...] = l_ref[...] * jnp.exp(m_old - m_new) + jnp.sum(p, axis=-1)
+    m_ref[...] = m_new
+    lab = lab_ref[...]                                     # (bt,)
+    ll_ref[...] = ll_ref[...] + jnp.sum(
+        jnp.where(col == lab[:, None], x, 0.0), axis=-1
+    )
+
+    @pl.when(j == nv - 1)
+    def _fin():
+        lse = jnp.log(jnp.maximum(l_ref[...], 1e-30)) + m_ref[...]
+        out_ref[...] = -(ll_ref[...] - lse)
+
+
+def xent_tiled(logits: jax.Array, labels: jax.Array, *, logical_v: int,
+               bt: int = 256, bv: int = 2048) -> jax.Array:
+    """Per-token NLL. logits: (T, V), labels: (T,) int32; T % bt == 0,
+    V % bv == 0 (ops.py owns the padding policy)."""
+    t, v = logits.shape
+    assert t % bt == 0 and v % bv == 0, (logits.shape, bt, bv)
+    nt, nv = t // bt, v // bv
+    return pl.pallas_call(
+        functools.partial(_xent_kernel, nv=nv, bv=bv, logical_v=logical_v),
+        grid=(nt, nv),
+        in_specs=[
+            pl.BlockSpec((bt,), lambda i, j: (i,)),
+            pl.BlockSpec((bt, bv), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((bt,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((t,), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((bt,), jnp.float32),
+            pltpu.VMEM((bt,), jnp.float32),
+            pltpu.VMEM((bt,), jnp.float32),
+        ],
+        interpret=INTERPRET,
+    )(labels, logits)

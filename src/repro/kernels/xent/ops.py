@@ -1,0 +1,28 @@
+"""Jitted wrapper: padding policy + mean reduction for the xent kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.layout import round_up
+from repro.kernels.xent import kernel
+
+
+@functools.partial(jax.jit, static_argnames=("logical_v", "bt", "bv"))
+def xent_mean(logits: jax.Array, labels: jax.Array, *, logical_v: int = 0,
+              bt: int = 256, bv: int = 2048) -> jax.Array:
+    """Mean NLL over (T,) tokens; pads T to bt and V to bv multiples.
+
+    Padded *tokens* get label 0 against a -inf-masked row contribution of
+    exactly lse-only... they are excluded by weighting instead.
+    """
+    t, v = logits.shape
+    logical_v = logical_v or v
+    tp = round_up(t, bt)
+    vp = round_up(v, bv)
+    lg = jnp.pad(logits, ((0, tp - t), (0, vp - v)))
+    lb = jnp.pad(labels.astype(jnp.int32), (0, tp - t))
+    nll = kernel.xent_tiled(lg, lb, logical_v=logical_v, bt=bt, bv=bv)
+    return nll[:t].mean()

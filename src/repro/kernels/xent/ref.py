@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the tiled cross-entropy kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def xent(logits: jax.Array, labels: jax.Array, *, logical_v: int) -> jax.Array:
+    """Per-token NLL with padded-vocab masking. logits (T, V), labels (T,)."""
+    lf = logits.astype(jnp.float32)
+    v = lf.shape[-1]
+    if logical_v < v:
+        col = jnp.arange(v)
+        lf = jnp.where(col[None, :] < logical_v, lf, -1e30)
+    lse = jax.scipy.special.logsumexp(lf, axis=-1)
+    lab = jnp.take_along_axis(lf, labels[:, None], axis=-1)[:, 0]
+    return lse - lab

@@ -1,0 +1,144 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run driver (deliverable e).
+
+For every (architecture x input shape) cell and each mesh -- single-pod
+(16, 16) = 256 chips, multi-pod (2, 16, 16) = 512 chips -- this script:
+
+  1. builds the production mesh (placeholder host devices; the two lines
+     above run before any other import because jax locks the device count
+     at first init),
+  2. lowers + compiles the cell's step function (train_step for train_4k,
+     prefill_step for prefill_32k, serve_step for decode cells) against
+     ShapeDtypeStruct inputs -- no allocation,
+  3. prints memory_analysis() (the fits-proof) and cost_analysis(),
+  4. extracts the collective census and (optionally) the unit-extrapolated
+     roofline cost terms (launch/costs.py),
+  5. appends one JSON record per cell to --out.
+
+Usage:
+    python -m repro.launch.dryrun --arch qwen3-4b --shape train_4k --mesh pod
+    python -m repro.launch.dryrun --all --out results/dryrun.json
+    python -m repro.launch.dryrun --all --mesh multipod --baseline
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["pod", "multipod", "both"], default="pod")
+    ap.add_argument("--all", action="store_true", help="every applicable cell")
+    ap.add_argument("--baseline", action="store_true",
+                    help="raw paper dims (no layout-policy padding)")
+    ap.add_argument("--costs", action="store_true",
+                    help="also extract unit-extrapolated roofline costs")
+    ap.add_argument("--out", default=None, help="append JSON records here")
+    args = ap.parse_args()
+
+    # heavyweight imports only after XLA_FLAGS is set
+    import jax
+
+    from repro.configs import ARCHS, get_config
+    from repro.configs.shapes import SHAPES, shape_applicable
+    from repro.launch import costs as costs_lib
+    from repro.launch import lowering
+    from repro.launch.mesh import make_production_mesh
+
+    assert len(jax.devices()) == 512, "dry-run needs 512 placeholder devices"
+
+    meshes = {"pod": False, "multipod": True, "both": None}[args.mesh]
+    mesh_kinds = ["pod", "multipod"] if args.mesh == "both" else [args.mesh]
+    archs = list(ARCHS) if args.all or not args.arch else [args.arch]
+    shapes = list(SHAPES) if args.all or not args.shape else [args.shape]
+    padded = not args.baseline
+
+    records = []
+    for mesh_kind in mesh_kinds:
+        mesh = make_production_mesh(multi_pod=(mesh_kind == "multipod"))
+        for arch in archs:
+            for shape_name in shapes:
+                cfg0 = get_config(arch)
+                ok, why = shape_applicable(cfg0, SHAPES[shape_name])
+                rec = {
+                    "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+                    "padded": padded,
+                }
+                if not ok:
+                    rec.update(status="skipped", reason=why)
+                    print(f"[skip] {arch} x {shape_name} x {mesh_kind}: {why}")
+                    records.append(rec)
+                    continue
+                t0 = time.time()
+                try:
+                    cell = lowering.lower_cell(arch, shape_name, mesh,
+                                               padded=padded)
+                    compiled = cell.lowered.compile()
+                    mem = lowering.memory_stats(compiled)
+                    cost = lowering.cost_stats(compiled)
+                    census = lowering.collective_census(compiled.as_text())
+                    _, changes = lowering.cell_config(
+                        arch, padded=padded,
+                        tp=dict(zip(mesh.axis_names,
+                                    mesh.devices.shape)).get("model", 1))
+                    rec.update(
+                        status="ok",
+                        compile_s=round(time.time() - t0, 1),
+                        memory=mem,
+                        cost_raw=cost,          # scan bodies counted once
+                        census_raw=census,
+                        layout_changes=changes,
+                        n_devices=int(mesh.devices.size),
+                    )
+                    print(f"[ok]   {arch} x {shape_name} x {mesh_kind} "
+                          f"({rec['compile_s']}s) "
+                          f"args={mem.get('argument_size_in_bytes', 0)/1e9:.2f}GB "
+                          f"temp={mem.get('temp_size_in_bytes', 0)/1e9:.2f}GB")
+                    print(f"       memory_analysis: {mem}")
+                    print(f"       cost_analysis:   {cost}")
+                    if args.costs:
+                        cc = costs_lib.cell_costs(arch, shape_name, mesh,
+                                                  padded=padded)
+                        rec["costs"] = {
+                            "flops": cc.flops,
+                            "hbm_bytes": cc.hbm_bytes,
+                            "wire_bytes": cc.wire_bytes,
+                            "collectives": cc.collectives,
+                            "raw": cc.raw,
+                        }
+                        print(f"       extrapolated: flops={cc.flops:.3e} "
+                              f"hbm={cc.hbm_bytes:.3e} wire={cc.wire_bytes:.3e}")
+                except Exception as e:  # noqa: BLE001 -- recorded, rethrown at end
+                    rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                               trace=traceback.format_exc()[-2000:])
+                    print(f"[FAIL] {arch} x {shape_name} x {mesh_kind}: {e}")
+                records.append(rec)
+
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        existing = []
+        if os.path.exists(args.out):
+            with open(args.out) as f:
+                existing = json.load(f)
+        # replace same-key records (re-runs update in place)
+        key = lambda r: (r["arch"], r["shape"], r["mesh"], r["padded"])
+        merged = {key(r): r for r in existing}
+        for r in records:
+            merged[key(r)] = r
+        with open(args.out, "w") as f:
+            json.dump(list(merged.values()), f, indent=1)
+        print(f"wrote {len(records)} records -> {args.out}")
+
+    failures = [r for r in records if r.get("status") == "error"]
+    if failures:
+        raise SystemExit(f"{len(failures)} cell(s) failed")
+
+
+if __name__ == "__main__":
+    main()

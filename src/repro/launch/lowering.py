@@ -1,0 +1,336 @@
+"""Cell lowering: (arch x shape x mesh) -> lowered/compiled artifacts + analysis.
+
+This module must be imported only after jax device count is configured
+(launch/dryrun.py sets XLA_FLAGS first).  It owns:
+
+  * rules selection per (cfg, shape, mesh),
+  * abstract state/batch/cache construction (ShapeDtypeStruct only),
+  * jit lowering with NamedShardings,
+  * post-compile analysis: cost_analysis, memory_analysis, and the
+    collective-traffic census parsed from the optimized HLO.
+
+Cost-accounting note (EXPERIMENTS.md SSRoofline): XLA's cost_analysis counts
+a while-loop body ONCE, so for scan-over-layers programs FLOPs/bytes come
+from small *unrolled* variants (1 and 2 pattern units) extrapolated linearly
+in unit count -- exact for homogeneous stacks.  memory_analysis and the
+compile proof always use the full scanned program.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.configs.shapes import SHAPES, ShapeSpec, input_specs, shape_applicable
+from repro.models import build_model
+from repro.models.params import ParamDef, abstract_params, is_def, map_tree
+from repro.optim.adamw import AdamWConfig
+from repro.optim.schedules import make_schedule
+from repro.parallel import rules as rules_lib
+from repro.parallel import specs as specs_lib
+from repro.parallel import steps as steps_lib
+
+# TPU v5e constants for the roofline terms
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # B/s / chip
+ICI_BW = 50e9                # B/s / link
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+# ---------------------------------------------------------------------------
+# Cell construction
+# ---------------------------------------------------------------------------
+
+def cell_config(arch: str, *, padded: bool, tp: int = 16):
+    cfg = get_config(arch)
+    changes: dict = {}
+    if padded:
+        cfg, changes = cfg.padded_for_mesh(tp)
+    return cfg, changes
+
+
+def cell_rules(cfg, shape: ShapeSpec, *, multi_pod: bool, tp: int = 16):
+    overrides = {}
+    if shape.name == "long_500k":
+        overrides = {"batch": None, "cache_seq": ("data",)}
+    elif shape.kind == "decode" and cfg.n_kv_heads % tp:
+        # flash-decoding style: KV heads cannot cover the model axis, so the
+        # cache shards over *sequence* instead (softmax partials cross TP)
+        overrides = {"cache_seq": ("model",), "kv_heads": None}
+    n_dev = 512 if multi_pod else 256
+    if (cfg.parallelism == "zero3" and shape.kind == "train"
+            and (SHAPES[shape.name].global_batch % n_dev == 0)):
+        # SSPerf (minicpm iteration 3): small dense models train fastest as
+        # pure ZeRO-3 -- batch over every mesh axis, weights gathered
+        # layerwise over the model axis, no TP at all.
+        overrides.update({
+            "mlp": None, "heads": None, "kv_heads": None,
+            "embed": ("model",),
+            "batch": ("pod", "data", "model") if multi_pod
+            else ("data", "model"),
+        })
+    return rules_lib.make_rules(
+        multi_pod=multi_pod,
+        fsdp=cfg.fsdp,
+        expert_tp=cfg.expert_tp,
+        overrides=overrides,
+    )
+
+
+def abstract_opt_state(defs, opt_cfg: AdamWConfig):
+    def moment(d: ParamDef):
+        if jnp.issubdtype(jnp.dtype(d.dtype), jnp.floating):
+            return jax.ShapeDtypeStruct(d.shape, jnp.float32)
+        return jax.ShapeDtypeStruct((), jnp.float32)
+
+    state = {
+        "step": jax.ShapeDtypeStruct((), jnp.int32),
+        "m": map_tree(moment, defs),
+        "v": map_tree(moment, defs),
+    }
+    if opt_cfg.master:
+        state["master"] = map_tree(
+            lambda d: jax.ShapeDtypeStruct(
+                d.shape,
+                jnp.float32 if jnp.issubdtype(jnp.dtype(d.dtype), jnp.floating)
+                else d.dtype,
+            ),
+            defs,
+        )
+    return state
+
+
+def _named(mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+@dataclasses.dataclass
+class LoweredCell:
+    arch: str
+    shape: ShapeSpec
+    mesh: Any
+    cfg: Any
+    lowered: Any
+    kind: str
+
+
+def lower_cell(arch: str, shape_name: str, mesh, *, padded: bool = True,
+               opt_master: bool | None = None) -> LoweredCell:
+    """Lower the cell's step (train/prefill/decode) for the given mesh."""
+    tp = dict(zip(mesh.axis_names, mesh.devices.shape)).get("model", 1)
+    cfg, _ = cell_config(arch, padded=padded, tp=tp)
+    return lower_cell_with_cfg(arch, shape_name, mesh, cfg,
+                               opt_master=opt_master)
+
+
+def lower_cell_with_cfg(arch: str, shape_name: str, mesh, cfg, *,
+                        opt_master: bool | None = None,
+                        microbatches: int = 4) -> LoweredCell:
+    import dataclasses as _dc
+    if cfg.n_experts and cfg.moe_groups == 1:
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        cfg = _dc.replace(
+            cfg, moe_groups=sizes.get("data", 1) * sizes.get("pod", 1)
+        )
+    n_dev = 512 if "pod" in mesh.axis_names else 256
+    if (cfg.parallelism == "zero3" and shape_name == "train_4k"
+            and SHAPES[shape_name].global_batch % n_dev == 0):
+        microbatches = 1  # zero3 active: per-device batch is already 1 seq
+    """Lower with an explicit (possibly reduced/unrolled) config.
+
+    ``microbatches`` applies to train cells only (gradient accumulation);
+    the cost-extraction path passes 1 so scan bodies stay out of the FLOPs
+    denominator.
+    """
+    multi_pod = "pod" in mesh.axis_names
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        raise ValueError(why)
+    model = build_model(cfg)
+    tp = dict(zip(mesh.axis_names, mesh.devices.shape)).get("model", 1)
+    rules = cell_rules(cfg, shape, multi_pod=multi_pod, tp=tp)
+    defs = model.param_defs()
+    if opt_master is None:
+        opt_master = arch != "grok-1-314b"  # 314B: bf16 update, fp32 moments
+    opt_cfg = AdamWConfig(master=opt_master)
+
+    with rules_lib.use_rules(rules, mesh=mesh):
+        pspecs = specs_lib.param_specs(defs, rules)
+        inputs = input_specs(cfg, shape)
+        if shape.kind == "train":
+            step = steps_lib.make_train_step(
+                model, opt_cfg, make_schedule("cosine"),
+                microbatches=microbatches,
+            )
+            state = {
+                "params": abstract_params(defs),
+                "opt": abstract_opt_state(defs, opt_cfg),
+            }
+            sspecs = {
+                "params": pspecs,
+                "opt": specs_lib.opt_state_specs(defs, rules),
+            }
+            if opt_cfg.master:
+                sspecs["opt"]["master"] = pspecs
+            bspecs = specs_lib.batch_specs(inputs, rules)
+            jf = jax.jit(
+                step,
+                in_shardings=(_named(mesh, sspecs), _named(mesh, bspecs)),
+                out_shardings=(
+                    _named(mesh, sspecs),
+                    _named(mesh, jax.tree.map(lambda _: P(), {
+                        "loss": 0, "lr": 0, "grad_norm": 0})),
+                ),
+                donate_argnums=(0,),
+            )
+            lowered = jf.lower(state, inputs)
+        elif shape.kind == "prefill":
+            step = steps_lib.make_prefill_step(model)
+            bspecs = specs_lib.batch_specs(inputs, rules)
+            out_spec = NamedSharding(
+                mesh, rules_lib.spec("batch", "vocab", rules=rules)
+            )
+            jf = jax.jit(
+                step,
+                in_shardings=(_named(mesh, pspecs), _named(mesh, bspecs)),
+                out_shardings=out_spec,
+            )
+            lowered = jf.lower(abstract_params(defs), inputs)
+        else:  # decode
+            step = steps_lib.make_decode_step(model)
+            cache_defs_tree = model.cache_defs(shape.global_batch, shape.seq_len)
+            cspecs = specs_lib.cache_specs(cache_defs_tree, rules)
+            tok_spec = NamedSharding(mesh, rules_lib.spec("batch", None,
+                                                          rules=rules))
+            jf = jax.jit(
+                step,
+                in_shardings=(_named(mesh, pspecs), _named(mesh, cspecs),
+                              tok_spec),
+                out_shardings=(tok_spec, _named(mesh, cspecs)),
+                donate_argnums=(1,),
+            )
+            lowered = jf.lower(
+                abstract_params(defs), inputs["cache"], inputs["tokens"]
+            )
+    return LoweredCell(arch=arch, shape=shape, mesh=mesh, cfg=cfg,
+                       lowered=lowered, kind=shape.kind)
+
+
+# ---------------------------------------------------------------------------
+# Analysis
+# ---------------------------------------------------------------------------
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_OP_RE = re.compile(
+    r"^%?\S+\s*=\s*(\([^)]*\)|\S+)\s+(" + "|".join(COLLECTIVES) + r")(-start)?\("
+)
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_BRACE_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 1
+
+
+def collective_census(hlo_text: str) -> dict[str, dict[str, float]]:
+    """Per-device ICI wire bytes for every collective in post-SPMD HLO.
+
+    The HLO module is the per-device program and operand types are not
+    printed inline, so we read the *result* shape(s) and apply the standard
+    ring cost model per group of size N:
+
+        all-reduce          2 (N-1)/N x result_bytes
+        all-gather            (N-1)/N x result_bytes   (result = gathered)
+        reduce-scatter        (N-1)   x result_bytes   (result = one shard)
+        all-to-all            (N-1)/N x result_bytes
+        collective-permute              result_bytes
+
+    While-loop bodies appear once; the roofline harness runs this on the
+    unrolled unit variants and extrapolates (see module docstring).
+    """
+    out: dict[str, dict[str, float]] = {
+        c: {"wire_bytes": 0.0, "result_bytes": 0.0, "count": 0}
+        for c in COLLECTIVES
+    }
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        result_ty, op = m.group(1), m.group(2)
+        n = _group_size(line)
+        b = sum(_shape_bytes(d, s) for d, s in _SHAPE_RE.findall(result_ty))
+        if op == "all-reduce":
+            wire = 2.0 * (n - 1) / max(n, 1) * b
+        elif op in ("all-gather", "all-to-all"):
+            wire = (n - 1) / max(n, 1) * b
+        elif op == "reduce-scatter":
+            wire = float(n - 1) * b
+        else:  # collective-permute
+            wire = float(b)
+        out[op]["wire_bytes"] += wire
+        out[op]["result_bytes"] += b
+        out[op]["count"] += 1
+    return out
+
+
+def census_total(census: dict) -> float:
+    return sum(v["wire_bytes"] for v in census.values())
+
+
+def memory_stats(compiled) -> dict[str, float]:
+    ma = compiled.memory_analysis()
+    stats = {}
+    for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "generated_code_size_in_bytes",
+                 "alias_size_in_bytes"):
+        v = getattr(ma, attr, None)
+        if v is not None:
+            stats[attr] = float(v)
+    return stats
+
+
+def cost_stats(compiled) -> dict[str, float]:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    return {
+        "flops": float(ca.get("flops", 0.0)),
+        "bytes": float(ca.get("bytes accessed", 0.0)),
+    }

@@ -1,0 +1,42 @@
+"""Mesh construction for the production topology.
+
+Single pod:  (16, 16)  -> ("data", "model")          = 256 chips (v5e pod)
+Multi-pod:   (2, 16, 16) -> ("pod", "data", "model") = 512 chips
+
+Functions, not module constants: importing this module never touches jax
+device state (the dry-run sets XLA_FLAGS before first jax init).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    need = math.prod(shape)
+    devices = jax.devices()
+    if len(devices) < need:
+        raise RuntimeError(
+            f"need {need} devices for {shape}, have {len(devices)} "
+            "(run under launch/dryrun.py, which forces 512 host devices)"
+        )
+    import numpy as np
+
+    dev = np.asarray(devices[:need]).reshape(shape)
+    return jax.sharding.Mesh(dev, axes)
+
+
+def make_test_mesh(shape=(1, 1), axes=("data", "model")):
+    """Small mesh over however many devices exist (tests on 1 CPU)."""
+    import numpy as np
+
+    need = math.prod(shape)
+    dev = np.asarray(jax.devices()[:need]).reshape(shape)
+    return jax.sharding.Mesh(dev, axes)
+
+
+def mesh_axis_size(mesh, name: str) -> int:
+    return dict(zip(mesh.axis_names, mesh.devices.shape)).get(name, 1)

@@ -1,0 +1,93 @@
+"""Production training launcher.
+
+Builds the mesh (or a host-local test mesh), applies the arch's layout
+policy and sharding rules, and runs the fault-tolerant trainer on the
+deterministic pipeline.  On a real pod this script is invoked once per host
+(JAX multi-process); in this container use --mesh host for a 1-device run.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen2-0.5b \
+        --mesh host --steps 20 --d-model 128 --layers 2
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import logging
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-0.5b")
+    ap.add_argument("--mesh", choices=["host", "pod", "multipod"],
+                    default="host")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--layers", type=int, default=0, help="override n_layers")
+    ap.add_argument("--d-model", type=int, default=0, help="override d_model")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_launch_train")
+    ap.add_argument("--baseline", action="store_true",
+                    help="skip the layout policy (paper-raw dims)")
+    args = ap.parse_args()
+    logging.basicConfig(level=logging.INFO,
+                        format="%(asctime)s %(name)s %(message)s")
+
+    import jax
+
+    from repro.configs import get_config, get_schedule, reduce_for_smoke
+    from repro.data.pipeline import DataConfig
+    from repro.launch.mesh import make_production_mesh, make_test_mesh
+    from repro.models import build_model
+    from repro.models.params import param_count
+    from repro.optim.adamw import AdamWConfig
+    from repro.optim.schedules import make_schedule
+    from repro.parallel import rules as rules_lib
+    from repro.runtime.trainer import Trainer, TrainerConfig
+
+    cfg = get_config(args.arch)
+    if args.mesh == "host":
+        cfg = reduce_for_smoke(cfg)
+        mesh = make_test_mesh((1, 1))
+        tp = 1
+    else:
+        mesh = make_production_mesh(multi_pod=(args.mesh == "multipod"))
+        tp = dict(zip(mesh.axis_names, mesh.devices.shape))["model"]
+    if not args.baseline and tp > 1:
+        cfg, changes = cfg.padded_for_mesh(tp)
+        logging.info("layout policy: %s", changes)
+    overrides = {}
+    if args.layers:
+        overrides["n_layers"] = args.layers
+    if args.d_model:
+        overrides["d_model"] = args.d_model
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+
+    model = build_model(cfg)
+    logging.info("arch=%s params=%.1fM mesh=%s", cfg.name,
+                 param_count(model.param_defs()) / 1e6, args.mesh)
+    rules = rules_lib.make_rules(
+        multi_pod=(args.mesh == "multipod"), fsdp=cfg.fsdp,
+        expert_tp=cfg.expert_tp,
+    )
+    data = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq_len,
+                      global_batch=args.global_batch,
+                      n_img_tokens=cfg.n_img_tokens,
+                      n_frames=cfg.n_frames if cfg.family == "encdec" else 0,
+                      d_model=cfg.d_model)
+    trainer = Trainer(
+        model, data, AdamWConfig(master=(args.arch != "grok-1-314b")),
+        make_schedule(get_schedule(args.arch), peak=3e-4, warmup=10,
+                      total=args.steps),
+        TrainerConfig(n_steps=args.steps, ckpt_every=max(args.steps // 4, 1),
+                      ckpt_dir=args.ckpt_dir, log_every=5),
+    )
+    with rules_lib.use_rules(rules, mesh=mesh if tp > 1 else None):
+        metrics = trainer.train(jax.random.PRNGKey(0))
+    print(f"done: {len(metrics)} steps, "
+          f"loss {metrics[0]['loss']:.3f} -> {metrics[-1]['loss']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

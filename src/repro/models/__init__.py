@@ -1,0 +1,9 @@
+"""Model zoo: decoder-only LM families + whisper-style enc-dec."""
+from repro.models.config import ModelConfig
+from repro.models.encdec import EncDecLM
+from repro.models.transformer import LM
+
+
+def build_model(cfg: ModelConfig):
+    """Facade constructor: same interface for every family."""
+    return EncDecLM(cfg) if cfg.family == "encdec" else LM(cfg)

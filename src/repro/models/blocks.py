@@ -1,0 +1,326 @@
+"""Shared transformer building blocks: norms, RoPE, GQA attention, MLP.
+
+Pure functions over ParamDef-described dicts.  Activation sharding is
+annotated with logical axes (repro.parallel.rules); weight sharding comes
+from the ParamDef axes.  Softmax and norm statistics are computed in fp32
+regardless of the activation dtype.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.params import ParamDef
+from repro.parallel.rules import shard
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def norm_defs(cfg: ModelConfig, d: int | None = None) -> dict:
+    d = d or cfg.d_model
+    out = {"scale": ParamDef((d,), (None,), init="ones", dtype=cfg.adtype)}
+    if cfg.norm == "layernorm":
+        out["bias"] = ParamDef((d,), (None,), init="zeros", dtype=cfg.adtype)
+    return out
+
+
+def apply_norm(p: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "layernorm":
+        mu = xf.mean(-1, keepdims=True)
+        var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + cfg.norm_eps)
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:
+        ms = (xf * xf).mean(-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + cfg.norm_eps) * p["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def rms_head_norm(scale: jax.Array, x: jax.Array, eps: float) -> jax.Array:
+    """Per-head RMSNorm over the last (head_dim) axis (qwen3 qk_norm)."""
+    xf = x.astype(jnp.float32)
+    ms = (xf * xf).mean(-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + eps) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Llama-style rotary embedding. x: (..., S, H, D), positions: (..., S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = jnp.exp(
+        -jnp.log(theta) * jnp.arange(0, half, dtype=jnp.float32) / half
+    )
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1, y2], axis=-1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA, optional qk-norm / bias / softcap / cross)
+# ---------------------------------------------------------------------------
+
+def attention_defs(cfg: ModelConfig) -> dict:
+    d, h, kh, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    dt = cfg.adtype
+    defs = {
+        "wq": ParamDef((d, h, hd), ("embed", "heads", "head_dim"), dtype=dt),
+        "wk": ParamDef((d, kh, hd), ("embed", "kv_heads", "head_dim"), dtype=dt),
+        "wv": ParamDef((d, kh, hd), ("embed", "kv_heads", "head_dim"), dtype=dt),
+        "wo": ParamDef((h, hd, d), ("heads", "head_dim", "embed"), dtype=dt),
+    }
+    if cfg.qkv_bias:
+        defs["bq"] = ParamDef((h, hd), ("heads", "head_dim"), init="zeros", dtype=dt)
+        defs["bk"] = ParamDef((kh, hd), ("kv_heads", "head_dim"), init="zeros", dtype=dt)
+        defs["bv"] = ParamDef((kh, hd), ("kv_heads", "head_dim"), init="zeros", dtype=dt)
+    if cfg.qk_norm:
+        defs["q_norm"] = ParamDef((hd,), (None,), init="ones", dtype=dt)
+        defs["k_norm"] = ParamDef((hd,), (None,), init="ones", dtype=dt)
+    return defs
+
+
+def _project_qkv(p: dict, x: jax.Array, x_kv: jax.Array, cfg: ModelConfig):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x_kv, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x_kv, p["wv"])
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    if cfg.qk_norm:
+        q = rms_head_norm(p["q_norm"], q, cfg.norm_eps)
+        k = rms_head_norm(p["k_norm"], k, cfg.norm_eps)
+    q = shard(q, "batch", None, "heads", None)
+    k = shard(k, "batch", None, "kv_heads", None)
+    v = shard(v, "batch", None, "kv_heads", None)
+    return q, k, v
+
+
+def _gqa_scores(q: jax.Array, k: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """q: (B,Sq,H,D), k: (B,Sk,KH,D) -> scores (B,KH,G,Sq,Sk) in fp32."""
+    b, sq, h, dhd = q.shape
+    kh = k.shape[2]
+    g = h // kh
+    qg = q.reshape(b, sq, kh, g, dhd)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k).astype(jnp.float32)
+    scores = scores / jnp.sqrt(jnp.asarray(dhd, jnp.float32))
+    if cfg.attn_softcap:
+        cap = cfg.attn_softcap
+        scores = cap * jnp.tanh(scores / cap)
+    return scores
+
+
+def _gqa_out(probs: jax.Array, v: jax.Array, p: dict, dtype) -> jax.Array:
+    """probs: (B,KH,G,Sq,Sk), v: (B,Sk,KH,D) -> (B,Sq,d_model)."""
+    ctx = jnp.einsum("bhgqk,bkhd->bqhgd", probs.astype(v.dtype), v)
+    b, sq, kh, g, dhd = ctx.shape
+    ctx = ctx.reshape(b, sq, kh * g, dhd)
+    out = jnp.einsum("bqhd,hdm->bqm", ctx, p["wo"])
+    return shard(out.astype(dtype), "batch", None, None)
+
+
+ATTN_BLOCK = 512  # KV tile length for the chunked (online-softmax) path
+
+
+def _chunked_gqa(q: jax.Array, k: jax.Array, v: jax.Array, cfg: ModelConfig,
+                 q_pos: jax.Array, kv_pos: jax.Array, causal: bool,
+                 block: int = ATTN_BLOCK) -> jax.Array:
+    """Flash-style attention: scan over KV tiles with running (m, l, acc).
+
+    Never materializes (Sq, Sk) scores -- the working set is one
+    (B, KH, G, Sq, block) tile, which is what makes the 32k prefill cells
+    (and zamba2's unscanned shared blocks) fit.  This is the jnp form of the
+    kernel a Pallas flash-attention would implement; block size is the
+    VMEM-tile knob (a multiple of 128 lanes, per the layout policy).
+    """
+    b, sq, h, d = q.shape
+    kh = k.shape[2]
+    g = h // kh
+    sk = k.shape[1]
+    pad = (-sk) % block
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_pos = jnp.pad(kv_pos, ((0, 0), (0, pad)), constant_values=-1)
+    nk = (sk + pad) // block
+    qg = q.reshape(b, sq, kh, g, d).transpose(0, 2, 3, 1, 4).astype(jnp.float32)
+    qg = qg / jnp.sqrt(jnp.asarray(d, jnp.float32))
+    kb = k.reshape(b, nk, block, kh, d).transpose(1, 0, 3, 2, 4)  # (nk,B,KH,L,D)
+    vb = v.reshape(b, nk, block, kh, d).transpose(1, 0, 3, 2, 4)
+    pb = kv_pos.reshape(b, nk, block).transpose(1, 0, 2)          # (nk,B,L)
+
+    def body(carry, inp):
+        m, l, acc = carry
+        kt, vt, pt = inp
+        s = jnp.einsum("bhgqd,bhkd->bhgqk", qg, kt.astype(jnp.float32))
+        if cfg.attn_softcap:
+            cap = cfg.attn_softcap
+            s = cap * jnp.tanh(s / cap)
+        valid = (pt >= 0)[:, None, None, None, :]
+        if causal:
+            valid = valid & (
+                q_pos[:, None, None, :, None] >= pt[:, None, None, None, :]
+            )
+        s = jnp.where(valid, s, -1e30)
+        mn = jnp.maximum(m, jnp.max(s, axis=-1))
+        pmat = jnp.where(s <= -1e29, 0.0, jnp.exp(s - mn[..., None]))
+        alpha = jnp.exp(m - mn)
+        l = l * alpha + jnp.sum(pmat, axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bhgqk,bhkd->bhgqd", pmat, vt.astype(jnp.float32)
+        )
+        return (mn, l, acc), None
+
+    init = (
+        jnp.full((b, kh, g, sq), -1e30, jnp.float32),
+        jnp.zeros((b, kh, g, sq), jnp.float32),
+        jnp.zeros((b, kh, g, sq, d), jnp.float32),
+    )
+    (m, l, acc), _ = jax.lax.scan(jax.checkpoint(body), init, (kb, vb, pb))
+    out = acc / jnp.maximum(l, 1e-9)[..., None]                   # (B,KH,G,Sq,D)
+    return out.transpose(0, 3, 1, 2, 4).reshape(b, sq, h, d)
+
+
+def attention(
+    p: dict,
+    x: jax.Array,
+    cfg: ModelConfig,
+    *,
+    positions: jax.Array,
+    causal: bool = True,
+    x_kv: jax.Array | None = None,
+    kv_positions: jax.Array | None = None,
+    use_rope: bool = True,
+) -> jax.Array:
+    """Full-sequence attention (training / prefill / encoder / cross)."""
+    cross = x_kv is not None
+    x_kv = x if x_kv is None else x_kv
+    kv_positions = positions if kv_positions is None else kv_positions
+    q, k, v = _project_qkv(p, x, x_kv, cfg)
+    if use_rope:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, kv_positions, cfg.rope_theta)
+    if k.shape[1] > ATTN_BLOCK:  # chunked path: anything beyond one tile
+        ctx = _chunked_gqa(q, k, v, cfg, positions, kv_positions,
+                           causal and not cross)
+        b, sq, h, d = ctx.shape
+        out = jnp.einsum("bqhd,hdm->bqm", ctx.astype(x.dtype), p["wo"])
+        return shard(out, "batch", None, None)
+    scores = _gqa_scores(q, k, cfg)
+    if causal and not cross:
+        mask = positions[:, None, :, None] >= kv_positions[:, None, None, :]
+        scores = jnp.where(mask[:, :, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return _gqa_out(probs, v, p, x.dtype)
+
+
+# ---- decode with KV cache -------------------------------------------------
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int, n: int) -> dict:
+    """Stacked (n-layer) KV cache in the configured layout."""
+    kh, hd = cfg.n_kv_heads, cfg.hd
+    if cfg.kv_cache_layout == "bhsd":
+        shape = (n, batch, kh, max_len, hd)
+        axes = ("layers", "batch", "kv_heads", "cache_seq", None)
+    else:  # bshd
+        shape = (n, batch, max_len, kh, hd)
+        axes = ("layers", "batch", "cache_seq", "kv_heads", None)
+    return {
+        "k": ParamDef(shape, axes, init="zeros", dtype=cfg.adtype),
+        "v": ParamDef(shape, axes, init="zeros", dtype=cfg.adtype),
+    }
+
+
+def _cache_put(cache_kv: jax.Array, new: jax.Array, idx: jax.Array, layout: str) -> jax.Array:
+    """Insert (B, 1, KH, D) at per-row position idx.
+
+    idx is (B,) int32 -- each batch slot writes at its own depth
+    (continuous batching: requests in one batch are at different positions).
+    A scalar idx broadcasts (the single-stream case).
+    """
+    idx = jnp.broadcast_to(jnp.asarray(idx, jnp.int32), (new.shape[0],))
+    if layout == "bhsd":
+        upd = new.transpose(0, 2, 1, 3)  # (B, KH, 1, D)
+        return jax.vmap(
+            lambda c, u, i: jax.lax.dynamic_update_slice(c, u, (0, i, 0))
+        )(cache_kv, upd, idx)
+    return jax.vmap(
+        lambda c, u, i: jax.lax.dynamic_update_slice(c, u, (i, 0, 0))
+    )(cache_kv, new, idx)
+
+
+def _cache_kv_view(cache_kv: jax.Array, layout: str) -> jax.Array:
+    """Return (B, S, KH, D) view of one layer's cache."""
+    if layout == "bhsd":
+        return cache_kv.transpose(0, 2, 1, 3)
+    return cache_kv
+
+
+def decode_attention(
+    p: dict,
+    x: jax.Array,
+    cache_k: jax.Array,
+    cache_v: jax.Array,
+    idx: jax.Array,
+    cfg: ModelConfig,
+    *,
+    use_rope: bool = True,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """One-token decode step.  x: (B, 1, d); idx scalar or per-slot (B,).
+    Returns (out, new_k, new_v)."""
+    b = x.shape[0]
+    layout = cfg.kv_cache_layout
+    idx = jnp.broadcast_to(jnp.asarray(idx, jnp.int32), (b,))
+    pos = idx[:, None]
+    q, k, v = _project_qkv(p, x, x, cfg)
+    if use_rope:
+        q = rope(q, pos, cfg.rope_theta)
+        k = rope(k, pos, cfg.rope_theta)
+    cache_k = _cache_put(cache_k, k, idx, layout)
+    cache_v = _cache_put(cache_v, v, idx, layout)
+    kv_k = _cache_kv_view(cache_k, layout)
+    kv_v = _cache_kv_view(cache_v, layout)
+    scores = _gqa_scores(q, kv_k, cfg)  # (B,KH,G,1,S)
+    s = kv_k.shape[1]
+    valid = (jnp.arange(s, dtype=jnp.int32)[None, :]
+             <= idx[:, None])[:, None, None, None, :]
+    scores = jnp.where(valid, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = _gqa_out(probs, kv_v, p, x.dtype)
+    return out, cache_k, cache_v
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU / GeGLU)
+# ---------------------------------------------------------------------------
+
+def mlp_defs(cfg: ModelConfig, d_ff: int | None = None) -> dict:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    dt = cfg.adtype
+    return {
+        "wi": ParamDef((d, f), ("embed", "mlp"), dtype=dt),
+        "wg": ParamDef((d, f), ("embed", "mlp"), dtype=dt),
+        "wo": ParamDef((f, d), ("mlp", "embed"), dtype=dt),
+    }
+
+
+def apply_mlp(p: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    act = jax.nn.silu if cfg.act == "silu" else jax.nn.gelu
+    h = jnp.einsum("bsd,df->bsf", x, p["wi"])
+    g = jnp.einsum("bsd,df->bsf", x, p["wg"])
+    h = shard(act(g) * h, "batch", None, "mlp")
+    out = jnp.einsum("bsf,fd->bsd", h, p["wo"])
+    return shard(out, "batch", None, None)

@@ -1,0 +1,200 @@
+"""Mamba2 (SSD) block -- chunked parallel training form + O(1) decode.
+
+Used by zamba2 (hybrid).  Dimensions: d_inner = expand * d_model, H heads of
+width P = ssm_head_dim, state width N = ssm_state, single B/C group.
+
+Training uses the chunked state-space-dual form: within a chunk of length L
+the output is an attention-like einsum with a causal decay mask; across
+chunks only the (B, H, N, P) boundary states are scanned.  All decay
+exponents are non-positive (A < 0, dt > 0) so exp() is stable; decay math is
+fp32.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.params import ParamDef
+from repro.parallel.rules import shard
+
+CHUNK = 256
+
+
+def mamba_defs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    dinner = cfg.ssm_expand * d
+    h = dinner // cfg.ssm_head_dim
+    n = cfg.ssm_state
+    k = cfg.ssm_conv
+    dt = cfg.adtype
+    return {
+        "wz": ParamDef((d, dinner), ("embed", "mlp"), dtype=dt),
+        "wx": ParamDef((d, dinner), ("embed", "mlp"), dtype=dt),
+        "wbc": ParamDef((d, 2 * n), ("embed", None), dtype=dt),
+        "wdt": ParamDef((d, h), ("embed", "heads"), dtype=dt),
+        "conv_x": ParamDef((k, dinner), ("conv", "mlp"), scale=0.5, dtype=dt),
+        "conv_x_b": ParamDef((dinner,), ("mlp",), init="zeros", dtype=dt),
+        "conv_bc": ParamDef((k, 2 * n), ("conv", None), scale=0.5, dtype=dt),
+        "conv_bc_b": ParamDef((2 * n,), (None,), init="zeros", dtype=dt),
+        "A_log": ParamDef((h,), ("heads",), init="zeros", dtype=jnp.float32),
+        "D": ParamDef((h,), ("heads",), init="ones", dtype=jnp.float32),
+        "dt_bias": ParamDef((h,), ("heads",), init="zeros", dtype=jnp.float32),
+        "gnorm": ParamDef((dinner,), ("mlp",), init="ones", dtype=dt),
+        "wo": ParamDef((dinner, d), ("mlp", "embed"), dtype=dt),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv along seq. x: (B,S,C), w: (K,C)."""
+    k = w.shape[0]
+    out = jnp.zeros_like(x)
+    for i in range(k):
+        shift = k - 1 - i
+        xi = jnp.pad(x, ((0, 0), (shift, 0), (0, 0)))[:, : x.shape[1], :]
+        out = out + xi * w[i]
+    return out + b
+
+
+def _proj(p: dict, u: jax.Array, cfg: ModelConfig):
+    """Shared projection path for train and decode-step inputs."""
+    z = jnp.einsum("bsd,di->bsi", u, p["wz"])
+    x = jnp.einsum("bsd,di->bsi", u, p["wx"])
+    bc = jnp.einsum("bsd,dn->bsn", u, p["wbc"])
+    dt_pre = jnp.einsum("bsd,dh->bsh", u, p["wdt"]).astype(jnp.float32)
+    return z, x, bc, dt_pre
+
+
+def _split_heads(x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    b, s, dinner = x.shape
+    return x.reshape(b, s, dinner // cfg.ssm_head_dim, cfg.ssm_head_dim)
+
+
+def mamba_forward(p: dict, u: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Full-sequence chunked SSD. u: (B, S, d_model)."""
+    b, s, d = u.shape
+    n = cfg.ssm_state
+    pdim = cfg.ssm_head_dim
+    l = min(CHUNK, s)
+    pad = (-s) % l
+    z, x, bc, dt_pre = _proj(p, u, cfg)
+    x = _causal_conv(x, p["conv_x"], p["conv_x_b"])
+    x = jax.nn.silu(x)
+    bc = jax.nn.silu(_causal_conv(bc, p["conv_bc"], p["conv_bc_b"]))
+    x = shard(x, "batch", None, "mlp")
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        bc = jnp.pad(bc, ((0, 0), (0, pad), (0, 0)))
+        dt_pre = jnp.pad(dt_pre, ((0, 0), (0, pad), (0, 0)))
+    sp = s + pad
+    nc = sp // l
+    xh = _split_heads(x, cfg).reshape(b, nc, l, -1, pdim)       # (B,nc,L,H,P)
+    bmat = bc[..., :n].reshape(b, nc, l, n).astype(jnp.float32)
+    cmat = bc[..., n:].reshape(b, nc, l, n).astype(jnp.float32)
+    dt = jax.nn.softplus(dt_pre + p["dt_bias"]).reshape(b, nc, l, -1)  # (B,nc,L,H)
+    a = -jnp.exp(p["A_log"])                                     # (H,) negative
+    da = dt * a                                                   # (B,nc,L,H) <= 0
+    cum = jnp.cumsum(da, axis=2)                                  # (B,nc,L,H)
+    xw = (xh.astype(jnp.float32) * dt[..., None])                 # dt_j * x_j
+    nheads = xh.shape[3]
+
+    ii = jnp.arange(l)
+    causal = (ii[:, None] >= ii[None, :]).astype(jnp.float32)     # (L,L)
+
+    # One chunk at a time (lax.scan over chunks, rematted): the decay
+    # "attention" tile (B,L,L,H) never exists for more than one chunk --
+    # the VMEM-sized working set a TPU SSD kernel would use.
+    def chunk_fn(state, inp):
+        xw_c, b_c, c_c, cum_c = inp                               # (B,L,...)
+        cb = jnp.einsum("bin,bjn->bij", c_c, b_c)                 # (B,L,L)
+        dec = jnp.exp(cum_c[:, :, None, :] - cum_c[:, None, :, :])
+        att = cb[..., None] * dec * causal[None, :, :, None]      # (B,L,L,H)
+        y = jnp.einsum("bijh,bjhp->bihp", att, xw_c)
+        y = y + jnp.einsum("bin,bhnp->bihp", c_c, state) * jnp.exp(
+            cum_c
+        )[..., None]
+        dec_last = jnp.exp(cum_c[:, -1:, :] - cum_c)              # (B,L,H)
+        new_state = jnp.exp(cum_c[:, -1, :])[:, :, None, None] * state + (
+            jnp.einsum("bjn,bjh,bjhp->bhnp", b_c, dec_last, xw_c)
+        )
+        return new_state, y
+
+    chunk_fn = jax.checkpoint(chunk_fn)
+    init = jnp.zeros((b, nheads, n, pdim), jnp.float32)
+    xs = (
+        xw.transpose(1, 0, 2, 3, 4),
+        bmat.transpose(1, 0, 2, 3),
+        cmat.transpose(1, 0, 2, 3),
+        cum.transpose(1, 0, 2, 3),
+    )
+    _, ys = jax.lax.scan(chunk_fn, init, xs)
+    y_sc = ys.transpose(1, 0, 2, 3, 4)                            # (B,nc,L,H,P)
+
+    y = y_sc + p["D"][None, None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(b, sp, -1)[:, :s, :].astype(u.dtype)            # (B,S,d_inner)
+
+    # ---- gate + norm + out ---------------------------------------------------
+    y = y * jax.nn.silu(z)
+    yf = y.astype(jnp.float32)
+    y = (yf * jax.lax.rsqrt((yf * yf).mean(-1, keepdims=True) + cfg.norm_eps)).astype(
+        u.dtype
+    ) * p["gnorm"]
+    return shard(jnp.einsum("bsi,id->bsd", y, p["wo"]), "batch", None, None)
+
+
+# ---------------------------------------------------------------------------
+# Decode (single token, O(1) state)
+# ---------------------------------------------------------------------------
+
+def mamba_cache_defs(cfg: ModelConfig, batch: int, n_stack: int) -> dict:
+    d = cfg.d_model
+    dinner = cfg.ssm_expand * d
+    h = dinner // cfg.ssm_head_dim
+    n = cfg.ssm_state
+    k = cfg.ssm_conv
+    dt = cfg.adtype
+    return {
+        "conv_x": ParamDef((n_stack, batch, k - 1, dinner),
+                           ("layers", "batch", None, "mlp"), init="zeros", dtype=dt),
+        "conv_bc": ParamDef((n_stack, batch, k - 1, 2 * n),
+                            ("layers", "batch", None, None), init="zeros", dtype=dt),
+        "ssm": ParamDef((n_stack, batch, h, n, cfg.ssm_head_dim),
+                        ("layers", "batch", "heads", "state", None),
+                        init="zeros", dtype=jnp.float32),
+    }
+
+
+def _conv_step(xt: jax.Array, state: jax.Array, w: jax.Array, b: jax.Array):
+    """xt: (B,1,C), state: (B,K-1,C) of previous inputs. Returns (y, new_state)."""
+    window = jnp.concatenate([state, xt], axis=1)                 # (B,K,C)
+    y = jnp.einsum("bkc,kc->bc", window, w)[:, None, :] + b
+    return y, window[:, 1:, :]
+
+
+def mamba_decode_step(p: dict, cache: dict, u: jax.Array, cfg: ModelConfig):
+    """u: (B,1,d). Returns (y, new_cache)."""
+    n = cfg.ssm_state
+    z, x, bc, dt_pre = _proj(p, u, cfg)
+    x, conv_x = _conv_step(x, cache["conv_x"], p["conv_x"], p["conv_x_b"])
+    x = jax.nn.silu(x)
+    bc, conv_bc = _conv_step(bc, cache["conv_bc"], p["conv_bc"], p["conv_bc_b"])
+    bc = jax.nn.silu(bc)
+    xh = _split_heads(x, cfg)[:, 0].astype(jnp.float32)           # (B,H,P)
+    bmat = bc[:, 0, :n].astype(jnp.float32)                       # (B,N)
+    cmat = bc[:, 0, n:].astype(jnp.float32)
+    dt = jax.nn.softplus(dt_pre[:, 0] + p["dt_bias"])             # (B,H)
+    a = -jnp.exp(p["A_log"])
+    decay = jnp.exp(dt * a)                                       # (B,H)
+    h = cache["ssm"]                                              # (B,H,N,P)
+    h = decay[:, :, None, None] * h + jnp.einsum(
+        "bn,bh,bhp->bhnp", bmat, dt, xh
+    )
+    y = jnp.einsum("bn,bhnp->bhp", cmat, h) + p["D"][None, :, None] * xh
+    y = y.reshape(u.shape[0], 1, -1).astype(u.dtype)
+    y = y * jax.nn.silu(z)
+    yf = y.astype(jnp.float32)
+    y = (yf * jax.lax.rsqrt((yf * yf).mean(-1, keepdims=True) + cfg.norm_eps)).astype(
+        u.dtype
+    ) * p["gnorm"]
+    out = jnp.einsum("bsi,id->bsd", y, p["wo"])
+    return out, {"conv_x": conv_x, "conv_bc": conv_bc, "ssm": h}

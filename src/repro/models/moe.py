@@ -1,0 +1,149 @@
+"""Mixture-of-Experts block: top-k router, capacity dispatch, EP sharding,
+and the paper-derived *skewed expert placement*.
+
+Dispatch is scatter-based (GShard capacity semantics without the (T, E, C)
+one-hot): tokens are ranked within their expert by a cumsum over the token
+axis, dropped beyond capacity, scattered into an (E, C, d) buffer, run
+through the stacked expert FFNs, and combined back with router weights.
+
+Skewed placement (core.sharding_skew): layer l's expert->device map is
+rotated by l, so a persistently hot expert index does not pin the same
+device in every layer -- the all-to-all analogue of the paper's one
+channel-step segment shift.  The rotation enters as a per-layer permutation
+vector carried in the scanned parameters (zero FLOPs, pure layout).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.sharding_skew import expert_permutation
+from repro.models.config import ModelConfig
+from repro.models.params import ParamDef
+from repro.parallel.rules import shard
+
+
+def moe_defs(cfg: ModelConfig) -> dict:
+    d, e, f = cfg.d_model, cfg.n_experts, cfg.moe_d_ff
+    dt = cfg.adtype
+    return {
+        "router": ParamDef((d, e), ("embed", None), dtype=jnp.float32),
+        "wi": ParamDef((e, d, f), ("expert", "embed", "expert_mlp"), dtype=dt),
+        "wg": ParamDef((e, d, f), ("expert", "embed", "expert_mlp"), dtype=dt),
+        "wo": ParamDef((e, f, d), ("expert", "expert_mlp", "embed"), dtype=dt),
+        # static, non-learned: layer's expert->slot permutation (skew)
+        "perm": ParamDef((e,), (None,), init="zeros", dtype=jnp.int32),
+    }
+
+
+def make_perms(cfg: ModelConfig, n_layers: int, n_expert_shards: int) -> np.ndarray:
+    """(L, E) permutation table: identity if skew disabled."""
+    e = cfg.n_experts
+    if not cfg.skewed_experts or n_expert_shards <= 1:
+        return np.tile(np.arange(e, dtype=np.int32), (n_layers, 1))
+    return np.stack(
+        [
+            expert_permutation(e, n_expert_shards, l).astype(np.int32)
+            for l in range(n_layers)
+        ]
+    )
+
+
+def apply_moe(p: dict, x: jax.Array, cfg: ModelConfig) -> tuple[jax.Array, jax.Array]:
+    """x: (B, S, d) -> (out, aux_loss).
+
+    GShard-style *grouped* dispatch: tokens are split into ``cfg.moe_groups``
+    groups aligned with the data shards.  Ranking, scatter and combine are
+    vmapped per group (no cross-shard data dependency -- the scatters stay
+    local to a shard), and the only cross-device traffic is the explicit
+    group-major <-> expert-major reshard of the (G, E, C_g, d) buffer: the
+    all-to-all this architecture is supposed to pay, and nothing else.
+    A global-capacity variant (G=1) costs ~20x more wire (EXPERIMENTS.md
+    SSPerf, moe iteration 2: GSPMD replicates global scatter contributions).
+    """
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    t = b * s
+    g = max(cfg.moe_groups, 1)
+    assert t % g == 0, (t, g)
+    tg = t // g
+    xf = shard(x.reshape(t, d), "batch", None)
+
+    logits = (xf.astype(jnp.float32) @ p["router"]).astype(jnp.float32)  # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, k)                # (T, k)
+    weights = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    # ---- skewed placement: map logical expert -> storage slot -------------
+    inv = jnp.argsort(p["perm"])            # logical -> slot
+    slot = inv[top_e]                        # (T, k)
+
+    # ---- per-group capacity ranking (sort-based, O(n log n)) ---------------
+    # position-in-expert = rank among equal expert ids.  A global (T*k, E)
+    # one-hot cumsum is O(T^2 E) in XLA's reduce-window lowering and
+    # serializes across shards (SSPerf moe iteration 1); stable argsort +
+    # per-expert offsets per group is the MegaBlocks-style dispatch.
+    cap = int(np.ceil(cfg.capacity_factor * tg * k / e))
+    cap += (-cap) % 8  # sublane-align the capacity axis (layout policy)
+    slot_g = slot.reshape(g, tg * k)
+    w_g = weights.reshape(g, tg * k)
+    token_of = jnp.repeat(jnp.arange(tg, dtype=jnp.int32), k)        # (tg*k,)
+
+    def rank_group(slots: jax.Array) -> jax.Array:
+        counts = jnp.zeros((e,), jnp.int32).at[slots].add(1)
+        starts = jnp.cumsum(counts) - counts                         # (E,)
+        order = jnp.argsort(slots, stable=True)
+        rank_sorted = jnp.arange(tg * k, dtype=jnp.int32) - starts[slots[order]]
+        return jnp.zeros((tg * k,), jnp.int32).at[order].set(rank_sorted)
+
+    pos = jax.vmap(rank_group)(slot_g)                               # (G, tg*k)
+    keep = pos < cap
+    idx = slot_g * cap + jnp.where(keep, pos, cap - 1)               # (G, tg*k)
+
+    # ---- dispatch: local scatter per group, then ONE reshard ---------------
+    xg = xf.reshape(g, tg, d)
+
+    def scatter_group(xg_i, idx_i, keep_i):
+        contrib = jnp.where(keep_i[:, None], xg_i[token_of], 0).astype(x.dtype)
+        return jnp.zeros((e * cap, d), x.dtype).at[idx_i].add(contrib)
+
+    buf = jax.vmap(scatter_group)(xg, idx, keep)                     # (G, E*cap, d)
+    buf = shard(buf.reshape(g, e, cap, d), "batch", None, None, None)
+    # Group-major -> expert-major reshard.  Empirically the best plan of SIX
+    # candidates (EXPERIMENTS.md SSPerf m2-m6): constraint flips, two-step
+    # slice+a2a, unconstrained propagation, and a custom-VJP symmetric a2a
+    # all regressed -- the a2a itself reaches its analytic optimum but a
+    # residual constraint-materialization all-gather dominates regardless,
+    # so the simple transpose (same AG, no extra a2a) wins on net.
+    eb = buf.transpose(1, 0, 2, 3).reshape(e, g * cap, d)
+    eb = shard(eb, "expert", "expert_cap", None)
+
+    # ---- expert FFNs --------------------------------------------------------
+    act = jax.nn.silu if cfg.act == "silu" else jax.nn.gelu
+    h = jnp.einsum("ecd,edf->ecf", eb, p["wi"])
+    gate = jnp.einsum("ecd,edf->ecf", eb, p["wg"])
+    h = shard(act(gate) * h, "expert", "expert_cap", "expert_mlp")
+    y = jnp.einsum("ecf,efd->ecd", h, p["wo"])
+    y = shard(y, "expert", "expert_cap", None)
+
+    # ---- combine: reshard back, local gather per group ----------------------
+    yg = y.reshape(e, g, cap, d).transpose(1, 0, 2, 3)
+    yg = shard(yg, "batch", None, None, None).reshape(g, e * cap, d)
+
+    def combine_group(y_i, idx_i, keep_i, w_i):
+        gathered = y_i[idx_i] * jnp.where(keep_i, w_i, 0)[:, None].astype(
+            x.dtype
+        )
+        return jnp.zeros((tg, d), x.dtype).at[token_of].add(gathered)
+
+    out = jax.vmap(combine_group)(yg, idx, keep, w_g)                # (G, tg, d)
+    out = shard(out.reshape(t, d), "batch", None)
+
+    # ---- aux load-balance loss (switch-style, on logical experts) ----------
+    me = jnp.mean(probs, axis=0)                                     # (E,)
+    ce = jnp.zeros(e, jnp.float32).at[top_e.reshape(-1)].add(
+        jnp.ones(t * k, jnp.float32)
+    ) / (t * k)
+    aux = e * jnp.sum(me * ce) * cfg.router_aux_weight
+    return out.reshape(b, s, d), aux

@@ -1,0 +1,383 @@
+"""Decoder-only LM covering dense / MoE / hybrid (zamba2) / ssm (xlstm) /
+vlm (prefix-embed) families.
+
+Layers are grouped into homogeneous *stages* (cfg.stages()); each stage is a
+jax.lax.scan over stacked per-layer parameters with an optional remat policy.
+Zamba2's shared attention block is a single parameter set applied at every
+('shared_attn', 1) stage with its own per-application KV cache.
+
+The module exposes stage-level callables so the roofline harness can lower
+one stage body and multiply by its trip count (XLA's cost_analysis counts a
+while-loop body once -- see EXPERIMENTS.md SSRoofline methodology).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import blocks, mamba2, moe, xlstm
+from repro.models.config import ModelConfig
+from repro.models.params import (
+    ParamDef, Tree, abstract_params, init_params, logical_axes, stack_defs,
+)
+from repro.parallel.rules import shard
+
+# ---------------------------------------------------------------------------
+# Parameter trees
+# ---------------------------------------------------------------------------
+
+def block_defs(cfg: ModelConfig, kind: str) -> Tree:
+    if kind == "dense":
+        return {
+            "ln1": blocks.norm_defs(cfg),
+            "attn": blocks.attention_defs(cfg),
+            "ln2": blocks.norm_defs(cfg),
+            "mlp": blocks.mlp_defs(cfg),
+        }
+    if kind == "moe":
+        return {
+            "ln1": blocks.norm_defs(cfg),
+            "attn": blocks.attention_defs(cfg),
+            "ln2": blocks.norm_defs(cfg),
+            "moe": moe.moe_defs(cfg),
+        }
+    if kind == "mamba":
+        return {"ln1": blocks.norm_defs(cfg), "mamba": mamba2.mamba_defs(cfg)}
+    if kind == "shared_attn":
+        return {
+            "win": ParamDef((2 * cfg.d_model, cfg.d_model), ("embed", "embed"),
+                            dtype=cfg.adtype),
+            "ln1": blocks.norm_defs(cfg),
+            "attn": blocks.attention_defs(cfg),
+            "ln2": blocks.norm_defs(cfg),
+            "mlp": blocks.mlp_defs(cfg),
+        }
+    if kind == "mlstm":
+        return {"ln1": blocks.norm_defs(cfg), "mlstm": xlstm.mlstm_defs(cfg)}
+    if kind == "slstm":
+        return {"ln1": blocks.norm_defs(cfg), "slstm": xlstm.slstm_defs(cfg)}
+    raise ValueError(kind)
+
+
+def stage_name(i: int, kind: str) -> str:
+    return f"s{i:02d}_{kind}"
+
+
+def param_defs(cfg: ModelConfig) -> Tree:
+    tree: Tree = {
+        "embed": ParamDef((cfg.vocab_size, cfg.d_model), ("vocab", "embed"),
+                          init="embed", dtype=cfg.adtype),
+        "final_norm": blocks.norm_defs(cfg),
+    }
+    if not cfg.tie_embeddings:
+        tree["lm_head"] = ParamDef((cfg.d_model, cfg.vocab_size),
+                                   ("embed", "vocab"), dtype=cfg.adtype)
+    has_shared = False
+    moe_layer = 0
+    for i, (kind, count) in enumerate(cfg.stages()):
+        if kind == "shared_attn":
+            has_shared = True
+            continue  # single shared subtree added below
+        tree[stage_name(i, kind)] = stack_defs(block_defs(cfg, kind), count)
+        moe_layer += count if kind == "moe" else 0
+    if has_shared:
+        tree["shared_attn"] = block_defs(cfg, "shared_attn")
+    return tree
+
+
+def init(cfg: ModelConfig, key: jax.Array) -> Tree:
+    params = init_params(key, param_defs(cfg))
+    # skew permutations are structural, not random
+    for i, (kind, count) in enumerate(cfg.stages()):
+        if kind == "moe":
+            perms = moe.make_perms(cfg, count, _expert_shards(cfg))
+            params[stage_name(i, kind)]["moe"]["perm"] = jnp.asarray(perms)
+    return params
+
+
+def _expert_shards(cfg: ModelConfig) -> int:
+    """Number of devices the expert axis is sharded over (for skew maps).
+    Resolved at launch from the mesh; default 16 documents the single-pod
+    model-axis width so skew tables are deterministic."""
+    return 16 if (cfg.n_experts and not cfg.expert_tp) else 1
+
+
+# ---------------------------------------------------------------------------
+# Forward (training / prefill)
+# ---------------------------------------------------------------------------
+
+def _apply_block(kind: str, p: Tree, x: jax.Array, cfg: ModelConfig,
+                 positions: jax.Array, h0: jax.Array | None):
+    """One layer. Returns (x, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    rs = jnp.asarray(cfg.residual_scale, x.dtype)
+    if kind in ("dense", "moe", "shared_attn"):
+        if kind == "shared_attn":
+            xin = jnp.concatenate([x, h0], axis=-1)
+            xin = jnp.einsum("bse,ed->bsd", xin, p["win"])
+        else:
+            xin = x
+        h = blocks.apply_norm(p["ln1"], xin, cfg)
+        h = blocks.attention(p["attn"], h, cfg, positions=positions)
+        x = x + rs * h
+        h = blocks.apply_norm(p["ln2"], x, cfg)
+        if kind == "moe":
+            h, aux = moe.apply_moe(p["moe"], h, cfg)
+        else:
+            h = blocks.apply_mlp(p["mlp"], h, cfg)
+        x = x + rs * h
+    elif kind == "mamba":
+        h = blocks.apply_norm(p["ln1"], x, cfg)
+        x = x + rs * mamba2.mamba_forward(p["mamba"], h, cfg)
+    elif kind == "mlstm":
+        h = blocks.apply_norm(p["ln1"], x, cfg)
+        x = x + rs * xlstm.mlstm_forward(p["mlstm"], h, cfg)
+    elif kind == "slstm":
+        h = blocks.apply_norm(p["ln1"], x, cfg)
+        x = x + rs * xlstm.slstm_forward(p["slstm"], h, cfg)
+    else:
+        raise ValueError(kind)
+    return x, aux
+
+
+def _stage_scan(kind: str, stage_params: Tree, x: jax.Array, cfg: ModelConfig,
+                positions: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Scan one homogeneous stage over its stacked layers."""
+
+    def body(carry, lp):
+        h, aux = carry
+        h = shard(h, "batch", None, None)
+        h, a = _apply_block(kind, lp, h, cfg, positions, None)
+        return (h, aux + a), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    carry = (x, jnp.zeros((), jnp.float32))
+    if cfg.unroll:
+        count = jax.tree_util.tree_leaves(stage_params)[0].shape[0]
+        for i in range(count):
+            carry, _ = body(carry, jax.tree.map(lambda a: a[i], stage_params))
+        return carry
+    (x, aux), _ = jax.lax.scan(body, carry, stage_params)
+    return x, aux
+
+
+def embed_tokens(params: Tree, tokens: jax.Array, cfg: ModelConfig) -> jax.Array:
+    x = params["embed"][tokens] * jnp.asarray(cfg.embed_scale, cfg.adtype)
+    return shard(x, "batch", None, None)
+
+
+def unembed(params: Tree, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    x = blocks.apply_norm(params["final_norm"], x, cfg)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, head) * jnp.asarray(
+        cfg.logit_scale, x.dtype
+    )
+    logits = logits.astype(jnp.float32)
+    if cfg.logit_softcap:
+        cap = cfg.logit_softcap
+        logits = cap * jnp.tanh(logits / cap)
+    return shard(logits, "batch", None, "vocab")
+
+
+def forward(params: Tree, tokens: jax.Array, cfg: ModelConfig,
+            prefix_embeds: jax.Array | None = None
+            ) -> tuple[jax.Array, jax.Array]:
+    """Returns (logits, aux_loss).  prefix_embeds: (B, P, d) (vlm stub)."""
+    x = embed_tokens(params, tokens, cfg)
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    h0 = x
+    aux_total = jnp.zeros((), jnp.float32)
+    for i, (kind, count) in enumerate(cfg.stages()):
+        if kind == "shared_attn":
+            fn = functools.partial(_apply_block, kind, cfg=cfg,
+                                   positions=positions)
+            if cfg.remat:
+                fn = jax.checkpoint(
+                    lambda pp, hh, hh0: _apply_block(
+                        "shared_attn", pp, hh, cfg, positions, hh0
+                    )
+                )
+                x, aux = fn(params["shared_attn"], x, h0)
+            else:
+                x, aux = _apply_block(kind, params["shared_attn"], x, cfg,
+                                      positions, h0)
+        else:
+            x, aux = _stage_scan(kind, params[stage_name(i, kind)], x, cfg,
+                                 positions)
+        aux_total = aux_total + aux
+    logits = unembed(params, x, cfg)
+    if prefix_embeds is not None:
+        logits = logits[:, prefix_embeds.shape[1]:]
+    return logits, aux_total
+
+
+def lm_loss(logits: jax.Array, labels: jax.Array, cfg: ModelConfig,
+            mask: jax.Array | None = None) -> jax.Array:
+    """Vocab-parallel mean CE.
+
+    The vocab axis stays sharded end to end (Megatron-style): padding rows
+    are suppressed with an elementwise iota mask (never an ``at[].set`` on
+    the gathered array), the label logit is extracted with a fused
+    iota==label reduction (never take_along_axis over a sharded axis), and
+    only (B, S) statistics cross shards.  Materializing full per-device
+    logits for a 152k vocab would cost ~40 GB/device -- this is the layout
+    policy applied to the loss.
+    """
+    v = logits.shape[-1]
+    logical = getattr(cfg, "vocab_logical", 0) or cfg.vocab_size
+    lf = logits.astype(jnp.float32)
+    viota = jax.lax.broadcasted_iota(jnp.int32, lf.shape, lf.ndim - 1)
+    if logical < v:
+        lf = lf + jnp.where(viota >= logical, -1e30, 0.0)
+    m = jnp.max(lf, axis=-1, keepdims=True)
+    lse = jnp.log(jnp.sum(jnp.exp(lf - m), axis=-1)) + m[..., 0]
+    label_logit = jnp.sum(
+        jnp.where(viota == labels[..., None], lf, 0.0), axis=-1
+    )
+    ll = label_logit - lse
+    if mask is None:
+        return -ll.mean()
+    mask = mask.astype(jnp.float32)
+    return -(ll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Decode (serve_step)
+# ---------------------------------------------------------------------------
+
+def cache_defs(cfg: ModelConfig, batch: int, max_len: int) -> Tree:
+    """Cache tree matching cfg.stages(); plus per-slot write indices
+    (continuous batching: each request sits at its own depth)."""
+    tree: Tree = {"idx": ParamDef((batch,), ("batch",), init="zeros",
+                                  dtype=jnp.int32)}
+    for i, (kind, count) in enumerate(cfg.stages()):
+        nm = stage_name(i, kind)
+        if kind in ("dense", "moe", "shared_attn"):
+            tree[nm] = blocks.init_kv_cache(cfg, batch, max_len, count)
+        elif kind == "mamba":
+            tree[nm] = mamba2.mamba_cache_defs(cfg, batch, count)
+        elif kind == "mlstm":
+            tree[nm] = xlstm.mlstm_cache_defs(cfg, batch, count)
+        elif kind == "slstm":
+            tree[nm] = xlstm.slstm_cache_defs(cfg, batch, count)
+    return tree
+
+
+def _decode_block(kind: str, p: Tree, cache: Tree, x: jax.Array, idx: jax.Array,
+                  cfg: ModelConfig, h0: jax.Array | None):
+    rs = jnp.asarray(cfg.residual_scale, x.dtype)
+    if kind in ("dense", "moe", "shared_attn"):
+        if kind == "shared_attn":
+            xin = jnp.concatenate([x, h0], axis=-1)
+            xin = jnp.einsum("bse,ed->bsd", xin, p["win"])
+        else:
+            xin = x
+        h = blocks.apply_norm(p["ln1"], xin, cfg)
+        h, ck, cv = blocks.decode_attention(
+            p["attn"], h, cache["k"], cache["v"], idx, cfg
+        )
+        x = x + rs * h
+        h = blocks.apply_norm(p["ln2"], x, cfg)
+        if kind == "moe":
+            h, _ = moe.apply_moe(p["moe"], h, cfg)
+        else:
+            h = blocks.apply_mlp(p["mlp"], h, cfg)
+        x = x + rs * h
+        return x, {"k": ck, "v": cv}
+    if kind == "mamba":
+        h = blocks.apply_norm(p["ln1"], x, cfg)
+        h, nc = mamba2.mamba_decode_step(p["mamba"], cache, h, cfg)
+        return x + rs * h, nc
+    if kind == "mlstm":
+        h = blocks.apply_norm(p["ln1"], x, cfg)
+        h, nc = xlstm.mlstm_decode_step(p["mlstm"], cache, h, cfg)
+        return x + rs * h, nc
+    if kind == "slstm":
+        h = blocks.apply_norm(p["ln1"], x, cfg)
+        h, nc = xlstm.slstm_decode_step(p["slstm"], cache, h, cfg)
+        return x + rs * h, nc
+    raise ValueError(kind)
+
+
+def decode_step(params: Tree, cache: Tree, tokens: jax.Array, cfg: ModelConfig
+                ) -> tuple[jax.Array, Tree]:
+    """One-token decode. tokens: (B, 1). Returns (logits, new_cache)."""
+    idx = cache["idx"]
+    x = embed_tokens(params, tokens, cfg)
+    h0 = x
+    new_cache: Tree = {"idx": idx + 1}
+    for i, (kind, count) in enumerate(cfg.stages()):
+        nm = stage_name(i, kind)
+        if kind == "shared_attn":
+            # single-layer stage: strip the stacked axis of its cache
+            c1 = jax.tree.map(lambda a: a[0], cache[nm])
+            x, nc = _decode_block(kind, params["shared_attn"], c1, x, idx,
+                                  cfg, h0)
+            new_cache[nm] = jax.tree.map(lambda a: a[None], nc)
+        else:
+            def body(carry, inp):
+                lp, lc = inp
+                h = carry
+                h, nc = _decode_block(kind, lp, lc, h, idx, cfg, None)
+                return h, nc
+
+            if cfg.unroll:
+                n = jax.tree_util.tree_leaves(cache[nm])[0].shape[0]
+                ncs = []
+                for l in range(n):
+                    x, nc_l = body(
+                        x,
+                        (jax.tree.map(lambda a: a[l], params[nm]),
+                         jax.tree.map(lambda a: a[l], cache[nm])),
+                    )
+                    ncs.append(nc_l)
+                nc = jax.tree.map(lambda *a: jnp.stack(a), *ncs)
+            else:
+                x, nc = jax.lax.scan(body, x, (params[nm], cache[nm]))
+            new_cache[nm] = nc
+    logits = unembed(params, x, cfg)
+    return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Facade
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class LM:
+    cfg: ModelConfig
+
+    def param_defs(self) -> Tree:
+        return param_defs(self.cfg)
+
+    def init(self, key: jax.Array) -> Tree:
+        return init(self.cfg, key)
+
+    def abstract_params(self) -> Tree:
+        return abstract_params(self.param_defs())
+
+    def param_axes(self) -> Tree:
+        return logical_axes(self.param_defs())
+
+    def forward(self, params, tokens, prefix_embeds=None):
+        return forward(params, tokens, self.cfg, prefix_embeds)
+
+    def loss(self, params, batch) -> jax.Array:
+        logits, aux = forward(
+            params, batch["tokens"], self.cfg, batch.get("img_embeds")
+        )
+        return lm_loss(logits, batch["labels"], self.cfg, batch.get("mask")) + aux
+
+    def cache_defs(self, batch: int, max_len: int) -> Tree:
+        return cache_defs(self.cfg, batch, max_len)
+
+    def decode_step(self, params, cache, tokens):
+        return decode_step(params, cache, tokens, self.cfg)

@@ -1,0 +1,311 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunkwise-parallel) and sLSTM
+(scalar memory, recurrent scan).
+
+mLSTM recurrence (per head, stabilized in log space):
+    m_t = max(lf_t + m_{t-1}, li_t)
+    C_t = exp(lf_t + m_{t-1} - m_t) C_{t-1} + exp(li_t - m_t) v_t k_t^T
+    n_t = exp(lf_t + m_{t-1} - m_t) n_{t-1} + exp(li_t - m_t) k_t
+    h_t = (q_t C_t) / max(|q_t . n_t|, exp(-m_t))
+
+Chunkwise closed form used for training: with B_i = sum_{s<=i} lf_s inside a
+chunk and u_i = max(m_0, cummax_{j<=i}(li_j - B_j)) the stabilizer is
+m_i = B_i + u_i, giving a causal attention-like intra term plus a carry term
+from (C_0, n_0, m_0).  Cross-chunk state is carried by lax.scan over chunks.
+
+sLSTM is inherently sequential (recurrent connection through h_{t-1}); it is
+implemented as a lax.scan over time with block-diagonal (per-head) recurrent
+weights, exactly as the architecture prescribes.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.params import ParamDef
+from repro.parallel.rules import shard
+
+CHUNK = 256
+
+
+def _dims(cfg: ModelConfig) -> tuple[int, int, int]:
+    dinner = 2 * cfg.d_model
+    h = cfg.n_heads
+    p = dinner // h
+    return dinner, h, p
+
+
+def mlstm_defs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    dinner, h, p = _dims(cfg)
+    dt = cfg.adtype
+    k = 4  # causal conv width on the q/k path
+    return {
+        "wup_x": ParamDef((d, dinner), ("embed", "mlp"), dtype=dt),
+        "wup_z": ParamDef((d, dinner), ("embed", "mlp"), dtype=dt),
+        "conv": ParamDef((k, dinner), ("conv", "mlp"), scale=0.5, dtype=dt),
+        "conv_b": ParamDef((dinner,), ("mlp",), init="zeros", dtype=dt),
+        # block-diagonal (per-head) projections, as in the reference mLSTM
+        "wq": ParamDef((h, p, p), ("heads", None, "head_dim"), dtype=dt),
+        "wk": ParamDef((h, p, p), ("heads", None, "head_dim"), dtype=dt),
+        "wv": ParamDef((h, p, p), ("heads", None, "head_dim"), dtype=dt),
+        "wi": ParamDef((dinner, h), ("mlp", "heads"), dtype=jnp.float32),
+        "wf": ParamDef((dinner, h), ("mlp", "heads"), dtype=jnp.float32),
+        "bi": ParamDef((h,), ("heads",), init="zeros", dtype=jnp.float32),
+        "bf": ParamDef((h,), ("heads",), init="ones", dtype=jnp.float32),
+        "gnorm": ParamDef((dinner,), ("mlp",), init="ones", dtype=dt),
+        "wo": ParamDef((dinner, d), ("mlp", "embed"), dtype=dt),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    k = w.shape[0]
+    out = jnp.zeros_like(x)
+    for i in range(k):
+        shift = k - 1 - i
+        xi = jnp.pad(x, ((0, 0), (shift, 0), (0, 0)))[:, : x.shape[1], :]
+        out = out + xi * w[i]
+    return out + b
+
+
+def _mlstm_qkvif(p: dict, xin: jax.Array, cfg: ModelConfig):
+    """Common pre-cell path. xin: (B,S,d_model)."""
+    x = jnp.einsum("bsd,di->bsi", xin, p["wup_x"])
+    z = jnp.einsum("bsd,di->bsi", xin, p["wup_z"])
+    xc = jax.nn.silu(_causal_conv(x, p["conv"], p["conv_b"]))
+    nh = p["wq"].shape[0]
+    xch = xc.reshape(*xc.shape[:2], nh, -1)
+    xh = x.reshape(*x.shape[:2], nh, -1)
+    q = jnp.einsum("bshp,hpq->bshq", xch, p["wq"])
+    k = jnp.einsum("bshp,hpq->bshq", xch, p["wk"])
+    v = jnp.einsum("bshp,hpq->bshq", xh, p["wv"])
+    li = (jnp.einsum("bsi,ih->bsh", xc.astype(jnp.float32), p["wi"]) + p["bi"])
+    lf = jax.nn.log_sigmoid(
+        jnp.einsum("bsi,ih->bsh", xc.astype(jnp.float32), p["wf"]) + p["bf"]
+    )
+    q = shard(q, "batch", None, "heads", None)
+    k = shard(k, "batch", None, "heads", None)
+    v = shard(v, "batch", None, "heads", None)
+    return x, z, q, k, v, li, lf
+
+
+def _mlstm_out(p: dict, h: jax.Array, z: jax.Array, cfg: ModelConfig, dtype):
+    """h: (B,S,H,P) cell output; gate, norm, down-project."""
+    b, s = h.shape[:2]
+    y = h.reshape(b, s, -1).astype(dtype) * jax.nn.silu(z)
+    yf = y.astype(jnp.float32)
+    y = (yf * jax.lax.rsqrt((yf * yf).mean(-1, keepdims=True) + cfg.norm_eps)).astype(
+        dtype
+    ) * p["gnorm"]
+    return shard(jnp.einsum("bsi,id->bsd", y, p["wo"]), "batch", None, None)
+
+
+def mlstm_forward(p: dict, xin: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Full-sequence chunkwise mLSTM. xin: (B,S,d_model)."""
+    b, s, _ = xin.shape
+    dinner, nh, pd = _dims(cfg)
+    x, z, q, k, v, li, lf = _mlstm_qkvif(p, xin, cfg)
+    l = min(CHUNK, s)
+    pad = (-s) % l
+    if pad:
+        q, k, v = (jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0))) for t in (q, k, v))
+        li = jnp.pad(li, ((0, 0), (0, pad), (0, 0)), constant_values=-1e30)
+        lf = jnp.pad(lf, ((0, 0), (0, pad), (0, 0)))
+    sp = s + pad
+    nc = sp // l
+    qc = q.reshape(b, nc, l, nh, pd).astype(jnp.float32) / jnp.sqrt(float(pd))
+    kc = k.reshape(b, nc, l, nh, pd).astype(jnp.float32)
+    vc = v.reshape(b, nc, l, nh, pd).astype(jnp.float32)
+    lic = li.reshape(b, nc, l, nh)
+    lfc = lf.reshape(b, nc, l, nh)
+    bcum = jnp.cumsum(lfc, axis=2)                                  # B_i
+
+    def chunk_fn(carry, inp):
+        c0, n0, m0 = carry                                          # (B,H,P,P),(B,H,P),(B,H)
+        qi, ki, vi, lii, bci = inp                                   # (B,L,H,*)
+        u = jnp.maximum(
+            m0[:, None, :], jax.lax.cummax(lii - bci, axis=1)
+        )                                                            # (B,L,H)
+        m = bci + u                                                  # m_i
+        # intra: D_ij = (B_i - B_j) + li_j - m_i  (j <= i)
+        dmat = (
+            bci[:, :, None, :] - bci[:, None, :, :]
+            + lii[:, None, :, :]
+            - m[:, :, None, :]
+        )                                                            # (B,L,L,H)
+        ii = jnp.arange(l)
+        causal = ii[:, None] >= ii[None, :]
+        w = jnp.where(causal[None, :, :, None], jnp.exp(dmat), 0.0)
+        qk = jnp.einsum("bihp,bjhp->bijh", qi, ki)                   # (B,L,L,H)
+        num_intra = jnp.einsum("bijh,bjhp->bihp", w * qk, vi)
+        den_intra = jnp.einsum("bijh,bjhp->bihp", w, ki)             # sum w*k
+        # inter: exp(B_i + m0 - m_i) q_i C_0
+        winter = jnp.exp(bci + m0[:, None, :] - m)                   # (B,L,H)
+        num_inter = jnp.einsum("bihp,bhpq->bihq", qi, c0) * winter[..., None]
+        den_inter = n0[:, None, :, :] * winter[..., None]
+        num = num_intra + num_inter
+        den = jnp.einsum("bihp,bihp->bih", qi, den_intra + den_inter)
+        hmax = jnp.maximum(jnp.abs(den), jnp.exp(-m))
+        hout = num / hmax[..., None]                                 # (B,L,H,P)
+        # carry update to end of chunk
+        mL = m[:, -1, :]
+        wlast = jnp.exp(bci[:, -1:, :] - bci + lii - mL[:, None, :]) # (B,L,H)
+        wmask = jnp.exp(bci[:, -1, :] + m0 - mL)                     # (B,H)
+        cL = wmask[:, :, None, None] * c0 + jnp.einsum(
+            "bjh,bjhp,bjhq->bhpq", wlast, ki, vi
+        )
+        nL = wmask[:, :, None] * n0 + jnp.einsum("bjh,bjhp->bhp", wlast, ki)
+        return (cL, nL, mL), hout
+
+    chunk_fn = jax.checkpoint(chunk_fn)
+    init = (
+        jnp.zeros((b, nh, pd, pd), jnp.float32),
+        jnp.zeros((b, nh, pd), jnp.float32),
+        jnp.full((b, nh), -1e30, jnp.float32),
+    )
+    xs = tuple(
+        t.transpose(1, 0, 2, 3, 4) if t.ndim == 5 else t.transpose(1, 0, 2, 3)
+        for t in (qc, kc, vc, lic, bcum)
+    )
+    _, hs = jax.lax.scan(chunk_fn, init, xs)
+    h = hs.transpose(1, 0, 2, 3, 4).reshape(b, sp, nh, pd)[:, :s]
+    return _mlstm_out(p, h, z, cfg, xin.dtype)
+
+
+def mlstm_cache_defs(cfg: ModelConfig, batch: int, n_stack: int) -> dict:
+    dinner, h, p = _dims(cfg)
+    return {
+        "c": ParamDef((n_stack, batch, h, p, p),
+                      ("layers", "batch", "heads", None, None),
+                      init="zeros", dtype=jnp.float32),
+        "n": ParamDef((n_stack, batch, h, p),
+                      ("layers", "batch", "heads", None), init="zeros",
+                      dtype=jnp.float32),
+        "m": ParamDef((n_stack, batch, h), ("layers", "batch", "heads"),
+                      init="neg_inf", dtype=jnp.float32),
+        "conv": ParamDef((n_stack, batch, 3, dinner),
+                         ("layers", "batch", None, "mlp"), init="zeros",
+                         dtype=cfg.adtype),
+    }
+
+
+def mlstm_decode_step(p: dict, cache: dict, xin: jax.Array, cfg: ModelConfig):
+    """xin: (B,1,d_model). Single recurrent step."""
+    dinner, nh, pd = _dims(cfg)
+    x = jnp.einsum("bsd,di->bsi", xin, p["wup_x"])
+    z = jnp.einsum("bsd,di->bsi", xin, p["wup_z"])
+    window = jnp.concatenate([cache["conv"], x], axis=1)             # (B,4,C)
+    xc = jax.nn.silu(
+        jnp.einsum("bkc,kc->bc", window, p["conv"])[:, None, :] + p["conv_b"]
+    )
+    xch = xc.reshape(*xc.shape[:2], nh, -1)
+    xh2 = x.reshape(*x.shape[:2], nh, -1)
+    q = jnp.einsum("bshp,hpq->bshq", xch, p["wq"])[:, 0].astype(jnp.float32)
+    k = jnp.einsum("bshp,hpq->bshq", xch, p["wk"])[:, 0].astype(jnp.float32)
+    v = jnp.einsum("bshp,hpq->bshq", xh2, p["wv"])[:, 0].astype(jnp.float32)
+    q = q / jnp.sqrt(float(pd))
+    li = (jnp.einsum("bsi,ih->bsh", xc.astype(jnp.float32), p["wi"]) + p["bi"])[:, 0]
+    lf = jax.nn.log_sigmoid(
+        jnp.einsum("bsi,ih->bsh", xc.astype(jnp.float32), p["wf"]) + p["bf"]
+    )[:, 0]
+    c0, n0, m0 = cache["c"], cache["n"], cache["m"]
+    m = jnp.maximum(lf + m0, li)
+    wf_ = jnp.exp(lf + m0 - m)
+    wi_ = jnp.exp(li - m)
+    c1 = wf_[:, :, None, None] * c0 + wi_[:, :, None, None] * jnp.einsum(
+        "bhp,bhq->bhpq", k, v
+    )
+    n1 = wf_[:, :, None] * n0 + wi_[:, :, None] * k
+    num = jnp.einsum("bhp,bhpq->bhq", q, c1)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhp,bhp->bh", q, n1)), jnp.exp(-m))
+    h = (num / den[..., None])[:, None]                              # (B,1,H,P)
+    out = _mlstm_out(p, h, z, cfg, xin.dtype)
+    return out, {"c": c1, "n": n1, "m": m, "conv": window[:, 1:, :]}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def slstm_defs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    h = cfg.n_heads
+    p = d // h
+    dt = cfg.adtype
+    return {
+        # input projections for gates i, f, z, o
+        "wx": ParamDef((d, 4, d), ("embed", None, "mlp"), dtype=jnp.float32),
+        # block-diagonal recurrent weights per head
+        "r": ParamDef((4, h, p, p), (None, "heads", None, None), dtype=jnp.float32),
+        "b": ParamDef((4, d), (None, "mlp"), init="zeros", dtype=jnp.float32),
+        "gnorm": ParamDef((d,), ("mlp",), init="ones", dtype=dt),
+        "wo": ParamDef((d, d), ("mlp", "embed"), dtype=dt),
+    }
+
+
+def _slstm_cell(p, carry, gx, nh, pd):
+    """One sLSTM step. carry: (c, n, m, h); gx: (B,4,d) precomputed x-part."""
+    c, n, m, h = carry
+    hh = h.reshape(h.shape[0], nh, pd)
+    gr = jnp.einsum("ghpq,bhq->gbhp", p["r"], hh).reshape(
+        4, h.shape[0], nh * pd
+    ).transpose(1, 0, 2)                                             # (B,4,d)
+    g = gx + gr + p["b"]
+    gi, gf, gz, go = g[:, 0], g[:, 1], g[:, 2], g[:, 3]
+    lf = jax.nn.log_sigmoid(gf)
+    mn = jnp.maximum(lf + m, gi)
+    wf_ = jnp.exp(lf + m - mn)
+    wi_ = jnp.exp(gi - mn)
+    c1 = wf_ * c + wi_ * jnp.tanh(gz)
+    n1 = wf_ * n + wi_
+    h1 = jax.nn.sigmoid(go) * c1 / jnp.maximum(n1, 1.0)
+    return (c1, n1, mn, h1), h1
+
+
+def slstm_forward(p: dict, xin: jax.Array, cfg: ModelConfig) -> jax.Array:
+    b, s, d = xin.shape
+    nh = cfg.n_heads
+    pd = d // nh
+    gx = jnp.einsum("bsd,dgi->bsgi", xin.astype(jnp.float32), p["wx"])  # (B,S,4,d)
+    init = (
+        jnp.zeros((b, d), jnp.float32),           # c
+        jnp.zeros((b, d), jnp.float32),           # n
+        jnp.full((b, d), -1e30, jnp.float32),     # m (no history)
+        jnp.zeros((b, d), jnp.float32),           # h
+    )
+
+    def step(carry, g):
+        return _slstm_cell(p, carry, g, nh, pd)
+
+    _, hs = jax.lax.scan(step, init, gx.transpose(1, 0, 2, 3))
+    h = hs.transpose(1, 0, 2)                                        # (B,S,d)
+    hf = h.astype(jnp.float32)
+    h = (hf * jax.lax.rsqrt((hf * hf).mean(-1, keepdims=True) + cfg.norm_eps)).astype(
+        xin.dtype
+    ) * p["gnorm"]
+    return shard(jnp.einsum("bsi,id->bsd", h, p["wo"]), "batch", None, None)
+
+
+def slstm_cache_defs(cfg: ModelConfig, batch: int, n_stack: int) -> dict:
+    d = cfg.d_model
+    return {
+        name: ParamDef((n_stack, batch, d), ("layers", "batch", "mlp"),
+                       init=("neg_inf" if name == "m" else "zeros"),
+                       dtype=jnp.float32)
+        for name in ("c", "n", "m", "h")
+    }
+
+
+def slstm_decode_step(p: dict, cache: dict, xin: jax.Array, cfg: ModelConfig):
+    b, _, d = xin.shape
+    nh = cfg.n_heads
+    pd = d // nh
+    gx = jnp.einsum("bsd,dgi->bsgi", xin.astype(jnp.float32), p["wx"])[:, 0]
+    carry = (cache["c"], cache["n"], cache["m"], cache["h"])
+    (c1, n1, m1, h1), h = _slstm_cell(p, carry, gx, nh, pd)
+    hf = h.astype(jnp.float32)
+    hn = (hf * jax.lax.rsqrt((hf * hf).mean(-1, keepdims=True) + cfg.norm_eps)).astype(
+        xin.dtype
+    ) * p["gnorm"]
+    out = jnp.einsum("bi,id->bd", hn, p["wo"])[:, None, :]
+    return out, {"c": c1, "n": n1, "m": m1, "h": h1}

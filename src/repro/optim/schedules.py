@@ -1,0 +1,35 @@
+"""LR schedules: cosine and MiniCPM's WSD (warmup-stable-decay)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(step, *, peak: float, warmup: int, total: int, floor: float = 0.1):
+    step = jnp.asarray(step, jnp.float32)
+    warm = peak * step / jnp.maximum(warmup, 1)
+    frac = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+    cos = floor * peak + (1 - floor) * peak * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+    return jnp.where(step < warmup, warm, cos)
+
+
+def wsd(step, *, peak: float, warmup: int, total: int, decay_frac: float = 0.1,
+        floor: float = 0.01):
+    """Warmup -> Stable (constant peak) -> Decay (final decay_frac of steps,
+    exponential to floor*peak), per MiniCPM (arXiv:2404.06395)."""
+    step = jnp.asarray(step, jnp.float32)
+    decay_steps = jnp.maximum(total * decay_frac, 1.0)
+    decay_start = total - decay_steps
+    warm = peak * step / jnp.maximum(warmup, 1)
+    frac = jnp.clip((step - decay_start) / decay_steps, 0.0, 1.0)
+    dec = peak * jnp.exp(jnp.log(floor) * frac)
+    out = jnp.where(step < warmup, warm, peak)
+    return jnp.where(step > decay_start, dec, out)
+
+
+def make_schedule(kind: str, *, peak: float = 3e-4, warmup: int = 100,
+                  total: int = 10_000):
+    if kind == "wsd":
+        return lambda s: wsd(s, peak=peak, warmup=warmup, total=total)
+    if kind == "cosine":
+        return lambda s: warmup_cosine(s, peak=peak, warmup=warmup, total=total)
+    raise ValueError(kind)

@@ -1,0 +1,179 @@
+"""Logical-axis sharding rules (Megatron/MaxText-style, pjit-native).
+
+Model code annotates tensors with *logical* axis names ("batch", "heads",
+"mlp", ...).  A ``Rules`` table -- chosen per mesh and per arch -- maps each
+logical axis to zero or more mesh axes.  The mapping is applied inside jit
+via ``with_sharding_constraint``; outside any rules context the annotations
+are free no-ops, so the same model code runs on one CPU device in tests and
+on a 512-chip mesh in the dry-run.
+
+The paper connection: a sharding rule *is* an address->resource map.  The
+roofline/perf loop tunes this table the same way the paper tunes offsets --
+analytically, from the (collective-)traffic model, not by trial and error.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Iterable, Mapping
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+AxisTarget = str | tuple[str, ...] | None
+
+# sensible single-pod defaults; launchers override per mesh/arch/shape
+DEFAULT_RULES: dict[str, AxisTarget] = {
+    "batch": ("data",),
+    "seq": None,
+    "embed": None,          # -> ("data",) under FSDP
+    "mlp": ("model",),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "head_dim": None,
+    "vocab": ("model",),
+    "expert": ("model",),
+    "expert_mlp": None,     # grok-style few-expert TP: -> ("model",)
+    "expert_cap": ("data",),  # MoE dispatch-buffer capacity axis
+    "expert_out": None,       # expert-TP: reduce-scatter the output d axis
+    "cache_seq": None,      # -> ("data",) for long-context decode
+    "state": None,
+    "layers": None,
+    "conv": None,
+    "frames": None,
+}
+
+_active: contextvars.ContextVar[Mapping[str, AxisTarget] | None] = (
+    contextvars.ContextVar("repro_sharding_rules", default=None)
+)
+_axis_sizes: contextvars.ContextVar[Mapping[str, int] | None] = (
+    contextvars.ContextVar("repro_mesh_axis_sizes", default=None)
+)
+_mesh: contextvars.ContextVar = contextvars.ContextVar("repro_mesh", default=None)
+
+
+@contextlib.contextmanager
+def use_rules(rules: Mapping[str, AxisTarget] | None, mesh=None):
+    token = _active.set(rules)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape)) if mesh is not None else None
+    token2 = _axis_sizes.set(sizes)
+    token3 = _mesh.set(mesh)
+    try:
+        yield
+    finally:
+        _active.reset(token)
+        _axis_sizes.reset(token2)
+        _mesh.reset(token3)
+
+
+def current_mesh():
+    return _mesh.get()
+
+
+def current_rules() -> Mapping[str, AxisTarget] | None:
+    return _active.get()
+
+
+def _divisible(dim: int, target: AxisTarget) -> bool:
+    """True when ``dim`` can be evenly sharded over the mapped mesh axes.
+    Unknown axis sizes (no mesh registered) are assumed fine."""
+    sizes = _axis_sizes.get()
+    if sizes is None or target is None:
+        return True
+    axes = (target,) if isinstance(target, str) else tuple(target)
+    n = 1
+    for a in axes:
+        n *= sizes.get(a, 1)
+    return dim % n == 0
+
+
+def make_rules(
+    *,
+    multi_pod: bool = False,
+    fsdp: bool = False,
+    expert_tp: bool = False,
+    shard_cache_seq: bool = False,
+    overrides: Mapping[str, AxisTarget] | None = None,
+) -> dict[str, AxisTarget]:
+    """Build a rules table for a mesh/arch/shape combination."""
+    rules = dict(DEFAULT_RULES)
+    rules["batch"] = ("pod", "data") if multi_pod else ("data",)
+    if multi_pod:
+        # hierarchical MoE dispatch: keep the pod axis on the capacity axis
+        # so the group->expert reshard stays pod-local (dropping it forces a
+        # cross-pod all-gather of the whole dispatch buffer -- measured 13x
+        # wire, EXPERIMENTS.md SSMulti-pod)
+        rules["expert_cap"] = ("pod", "data")
+    if fsdp:
+        rules["embed"] = ("data",)
+    if expert_tp:
+        rules["expert"] = None
+        rules["expert_mlp"] = ("model",)
+    if shard_cache_seq:
+        rules["cache_seq"] = ("data",)
+    if overrides:
+        rules.update(overrides)
+    return rules
+
+
+def spec(*axes: str | None, rules: Mapping[str, AxisTarget] | None = None,
+         shape: tuple[int, ...] | None = None) -> P:
+    """PartitionSpec for a tuple of logical axis names.
+
+    When ``shape`` is given (and a mesh is registered via use_rules), any
+    dimension that is not evenly divisible by its mapped mesh axes falls
+    back to replication -- the GSPMD-pragmatic baseline the layout policy
+    then improves on by padding (EXPERIMENTS.md SSPerf).
+    """
+    rules = rules if rules is not None else (current_rules() or {})
+    parts = []
+    used: set[str] = set()
+    for i, ax in enumerate(axes):
+        tgt = rules.get(ax) if ax is not None else None
+        if tgt is not None and shape is not None and not _divisible(
+            shape[i], tgt
+        ):
+            tgt = None
+        if tgt is not None:
+            # a mesh axis may appear at most once per spec: first dim wins
+            names = (tgt,) if isinstance(tgt, str) else tuple(tgt)
+            names = tuple(n for n in names if n not in used)
+            used.update(names)
+            tgt = names or None
+            if tgt is not None and shape is not None and not _divisible(
+                shape[i], tgt
+            ):
+                tgt = None
+        if tgt is None:
+            parts.append(None)
+        elif isinstance(tgt, str):
+            parts.append(tgt)
+        else:
+            parts.append(tuple(tgt) if len(tgt) > 1 else tgt[0])
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+def shard(x: jax.Array, *axes: str | None) -> jax.Array:
+    """Constrain ``x``'s sharding by logical axes; no-op without a mesh."""
+    rules = current_rules()
+    mesh = _mesh.get()
+    if rules is None or mesh is None:
+        return x
+    s = spec(*axes, rules=rules, shape=tuple(x.shape))
+    return jax.lax.with_sharding_constraint(
+        x, jax.sharding.NamedSharding(mesh, s)
+    )
+
+
+def tree_specs(axes_tree, rules: Mapping[str, AxisTarget] | None = None):
+    """Map a tree of logical-axes tuples to PartitionSpecs."""
+    rules = rules if rules is not None else (current_rules() or {})
+    return jax.tree.map(
+        lambda axes: spec(*axes, rules=rules),
+        axes_tree,
+        is_leaf=lambda v: isinstance(v, tuple) and all(
+            isinstance(a, str) or a is None for a in v
+        ),
+    )

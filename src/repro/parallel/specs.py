@@ -1,0 +1,50 @@
+"""PartitionSpec derivation for params, optimizer state, batches, caches."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.params import ParamDef, is_def, map_tree
+from repro.parallel.rules import spec
+
+
+def _floating(d: ParamDef) -> bool:
+    return jnp.issubdtype(jnp.dtype(d.dtype), jnp.floating)
+
+
+def param_specs(defs, rules) -> dict:
+    return map_tree(lambda d: spec(*d.axes, rules=rules, shape=d.shape), defs)
+
+
+def opt_state_specs(defs, rules) -> dict:
+    """Specs matching optim.adamw.init_state structure."""
+    moment = map_tree(
+        lambda d: spec(*d.axes, rules=rules, shape=d.shape)
+        if _floating(d) else P(), defs
+    )
+    return {"step": P(), "m": moment, "v": moment}
+
+
+def master_specs(defs, rules) -> dict:
+    return param_specs(defs, rules)
+
+
+def state_specs(defs, rules, *, master: bool) -> dict:
+    out = {"params": param_specs(defs, rules), "opt": opt_state_specs(defs, rules)}
+    if master:
+        out["opt"]["master"] = master_specs(defs, rules)
+    return out
+
+
+def batch_specs(batch_tree, rules) -> dict:
+    """Leading axis of every batch leaf is the (global) batch axis."""
+    return jax.tree.map(
+        lambda x: spec("batch", None, rules=rules, shape=tuple(x.shape)),
+        batch_tree,
+    )
+
+
+def cache_specs(cache_defs_tree, rules) -> dict:
+    return map_tree(lambda d: spec(*d.axes, rules=rules, shape=d.shape),
+                    cache_defs_tree)

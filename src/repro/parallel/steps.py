@@ -1,0 +1,110 @@
+"""Step functions: train / prefill / decode, pjit-ready.
+
+These close over the model facade and optimizer config; the launcher (or
+dry-run) wraps them in jax.jit with in/out shardings derived from
+parallel.specs and lowers against abstract inputs.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import adamw
+
+
+def make_train_step(model, opt_cfg: adamw.AdamWConfig,
+                    schedule: Callable, *, microbatches: int = 1) -> Callable:
+    """Train step with optional gradient accumulation.
+
+    With ``microbatches > 1`` the global batch is processed as a scan over
+    micro-slices with fp32 gradient accumulation -- the standard activation
+    -memory lever at 4k+ sequence lengths (the optimizer update still sees
+    the full-batch gradient, so numerics are schedule-identical up to fp32
+    accumulation order).
+    """
+
+    def grad_fn(params, batch):
+        return jax.value_and_grad(model.loss, allow_int=True)(params, batch)
+
+    def train_step(state: dict, batch: dict) -> tuple[dict, dict]:
+        params = state["params"]
+        if microbatches == 1:
+            loss, grads = grad_fn(params, batch)
+        else:
+            split = jax.tree.map(
+                lambda x: x.reshape(microbatches, x.shape[0] // microbatches,
+                                    *x.shape[1:]),
+                batch,
+            )
+
+            def acc_fn(carry, mb):
+                closs, cgrads = carry
+                loss, grads = grad_fn(params, mb)
+                def add(a, g):
+                    if g.dtype == jax.dtypes.float0:
+                        return a
+                    return a + g.astype(jnp.float32)
+
+                cgrads = jax.tree.map(add, cgrads, grads)
+                return (closs + loss, cgrads), None
+
+            init = (
+                jnp.zeros((), jnp.float32),
+                jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+            )
+            (loss, grads), _ = jax.lax.scan(acc_fn, init, split)
+            inv = 1.0 / microbatches
+            loss = loss * inv
+            grads = jax.tree.map(lambda g: g * inv, grads)
+        lr = schedule(state["opt"]["step"])
+        params, opt, metrics = adamw.apply_updates(
+            params, grads, state["opt"], lr, opt_cfg
+        )
+        return {"params": params, "opt": opt}, {
+            "loss": loss, "lr": lr, **metrics
+        }
+
+    return train_step
+
+
+def make_eval_step(model) -> Callable:
+    def eval_step(params: dict, batch: dict) -> jax.Array:
+        return model.loss(params, batch)
+
+    return eval_step
+
+
+def make_prefill_step(model) -> Callable:
+    """Inference prefill: full forward, returns fp32 logits of the last
+    position (the serving handoff) plus the full-sequence logits."""
+    cfg = model.cfg
+
+    def prefill_step(params: dict, batch: dict):
+        if cfg.family == "encdec":
+            logits, _ = model.forward(params, batch["tokens"], batch["frames"])
+        elif cfg.family == "vlm":
+            logits, _ = model.forward(params, batch["tokens"],
+                                      batch.get("img_embeds"))
+        else:
+            logits, _ = model.forward(params, batch["tokens"])
+        return logits[:, -1, :]
+
+    return prefill_step
+
+
+def make_decode_step(model) -> Callable:
+    """serve_step: one new token against the KV/state cache; greedy token."""
+
+    def decode_step(params: dict, cache: dict, tokens: jax.Array):
+        logits, new_cache = model.decode_step(params, cache, tokens)
+        next_tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        return next_tok[:, None], new_cache
+
+    return decode_step
+
+
+def init_train_state(model, opt_cfg: adamw.AdamWConfig, key) -> dict:
+    params = model.init(key)
+    return {"params": params, "opt": adamw.init_state(params, opt_cfg)}

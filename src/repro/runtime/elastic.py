@@ -1,0 +1,59 @@
+"""Elastic mesh management + failure handling policy.
+
+At 1000+-node scale, node loss is routine.  The policy here:
+
+  1. keep the model (TP) axis intact -- TP re-sharding invalidates every
+     weight shard, so a failed host inside a TP group retires the whole
+     group;
+  2. shrink the *data* axis to the largest size the surviving hosts support
+     (DP re-sharding only re-slices the batch, cheap);
+  3. re-lower the step for the new mesh, restore the latest checkpoint
+     (optimizer state is DP-replicated or re-shardable), and resume from the
+     checkpointed data step -- the pipeline is a pure function of step, so
+     no data is lost or duplicated;
+  4. straggler mitigation: the batch is re-chunked "static,1"-style across
+     the DP groups each resize (the paper's scheduling result: fine
+     interleaving smooths per-group imbalance).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshPlan:
+    dp: int
+    tp: int
+    n_devices: int
+
+    @property
+    def shape(self) -> tuple[int, int]:
+        return (self.dp, self.tp)
+
+
+def plan_mesh(n_devices: int, *, tp: int, min_dp: int = 1) -> MeshPlan:
+    """Largest (dp, tp) grid with the TP axis preserved."""
+    if n_devices < tp * min_dp:
+        raise RuntimeError(
+            f"cannot keep tp={tp} with only {n_devices} devices"
+        )
+    dp = n_devices // tp
+    return MeshPlan(dp=dp, tp=tp, n_devices=dp * tp)
+
+
+def surviving_mesh(devices, failed_ids: set[int], *, tp: int):
+    """Mesh over surviving devices, retiring partial TP groups."""
+    alive = [d for d in devices if d.id not in failed_ids]
+    plan = plan_mesh(len(alive), tp=tp)
+    dev = np.asarray(alive[: plan.n_devices]).reshape(plan.shape)
+    return jax.sharding.Mesh(dev, ("data", "model"))
+
+
+def rebalance_batch(global_batch: int, dp: int) -> list[int]:
+    """static,1-style chunking: sizes differ by at most one."""
+    base, rem = divmod(global_batch, dp)
+    return [base + (1 if i < rem else 0) for i in range(dp)]

@@ -1,0 +1,85 @@
+"""Fault-tolerant training loop.
+
+Checkpoints every ``ckpt_every`` steps (async, atomic); any exception in a
+step restores the latest checkpoint and replays from its step (the data
+pipeline is a pure function of step, so replay is exact).  ``fail_injector``
+lets tests simulate node failures at chosen steps.
+"""
+from __future__ import annotations
+
+import dataclasses
+import logging
+import time
+from typing import Callable
+
+import jax
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.data.pipeline import DataConfig, make_batch
+from repro.optim import adamw
+from repro.parallel import steps as steps_lib
+
+log = logging.getLogger("repro.trainer")
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    n_steps: int = 20
+    ckpt_every: int = 5
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    max_retries: int = 3
+    log_every: int = 1
+
+
+class Trainer:
+    def __init__(self, model, data_cfg: DataConfig, opt_cfg: adamw.AdamWConfig,
+                 schedule, tcfg: TrainerConfig, *, sharding=None):
+        self.model = model
+        self.data_cfg = data_cfg
+        self.opt_cfg = opt_cfg
+        self.tcfg = tcfg
+        self.sharding = sharding
+        self.ckpt = CheckpointManager(tcfg.ckpt_dir)
+        self.step_fn = jax.jit(steps_lib.make_train_step(model, opt_cfg, schedule))
+        self.metrics: list[dict] = []
+
+    def init_or_restore(self, key) -> tuple[int, dict]:
+        state = steps_lib.init_train_state(self.model, self.opt_cfg, key)
+        restored = self.ckpt.restore_latest(state)
+        if restored is not None:
+            step, state = restored
+            log.info("restored checkpoint at step %d", step)
+            return step, state
+        return 0, state
+
+    def train(self, key, *, fail_injector: Callable[[int], None] | None = None
+              ) -> list[dict]:
+        step, state = self.init_or_restore(key)
+        retries = 0
+        while step < self.tcfg.n_steps:
+            try:
+                if fail_injector is not None:
+                    fail_injector(step)
+                batch = make_batch(self.data_cfg, step, self.sharding)
+                state, metrics = self.step_fn(state, batch)
+                loss = float(metrics["loss"])
+                self.metrics.append({"step": step, "loss": loss,
+                                     "grad_norm": float(metrics["grad_norm"])})
+                if step % self.tcfg.log_every == 0:
+                    log.info("step %d loss %.4f", step, loss)
+                step += 1
+                retries = 0
+                if step % self.tcfg.ckpt_every == 0:
+                    self.ckpt.save(step, state, meta={"loss": loss})
+            except Exception as e:  # noqa: BLE001 -- the whole point
+                retries += 1
+                if retries > self.tcfg.max_retries:
+                    raise
+                log.warning("step %d failed (%s); restoring", step, e)
+                restored = self.ckpt.restore_latest(state)
+                if restored is not None:
+                    step, state = restored
+                # else: replay from current state (failure before 1st ckpt)
+        self.ckpt.save(step, state, meta={"final": True})
+        self.ckpt.wait()
+        return self.metrics

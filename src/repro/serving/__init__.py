@@ -1,0 +1,2 @@
+"""Serving: continuous batching over the serve_step decode path."""
+from repro.serving.scheduler import ContinuousBatcher, Request

@@ -1,0 +1,132 @@
+"""Continuous batching scheduler (vLLM-style slot machine, jit-friendly).
+
+A fixed batch of decode *slots* advances in lockstep through one jitted
+serve_step per tick; requests of ragged lengths stream through the slots:
+
+  * admit  -- a free slot takes the next queued request; the slot's cache
+    rows are reset from a pristine template (per-slot idx -> 0, SSM/mLSTM
+    states -> init), so no state leaks across tenants,
+  * prefill -- the request's prompt is teacher-forced through serve_step
+    (one token/tick, exactly the decode path the dry-run lowers),
+  * decode -- the model's greedy token feeds back until max_new_tokens or
+    EOS, then the slot retires and re-admits.
+
+The per-slot cache index (models/blocks._cache_put) is what makes ragged
+co-residency correct: every slot attends over exactly its own prefix.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Iterable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.params import init_params
+from repro.parallel import steps as steps_lib
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: list[int]
+    max_new_tokens: int
+    generated: list[int] = dataclasses.field(default_factory=list)
+    fed: int = 0                      # prompt tokens fed so far
+
+    @property
+    def prefilling(self) -> bool:
+        return self.fed < len(self.prompt)
+
+    def done(self, eos_id: int | None) -> bool:
+        if len(self.generated) >= self.max_new_tokens:
+            return True
+        return eos_id is not None and self.generated and (
+            self.generated[-1] == eos_id
+        )
+
+
+class ContinuousBatcher:
+    def __init__(self, model, params, *, slots: int, max_len: int,
+                 eos_id: int | None = None, seed: int = 0):
+        self.model = model
+        self.params = params
+        self.slots = slots
+        self.eos_id = eos_id
+        self.decode = jax.jit(steps_lib.make_decode_step(model))
+        key = jax.random.PRNGKey(seed)
+        self.cache = init_params(key, model.cache_defs(slots, max_len))
+        self._template = jax.tree.map(jnp.copy, self.cache)
+        self.slot_req: list[Request | None] = [None] * slots
+        self.queue: deque[Request] = deque()
+        self.ticks = 0
+        self.completed: dict[int, list[int]] = {}
+
+    # ------------------------------------------------------------------
+    def submit(self, reqs: Iterable[Request]) -> None:
+        self.queue.extend(reqs)
+        self._admit()
+
+    def _reset_slot(self, cache, slot: int):
+        """Copy pristine template rows into ``slot`` for every cache leaf.
+        The batch axis is axis 0 for 'idx' and axis 1 (after the stacked
+        layer axis) for every state/KV leaf."""
+
+        def reset(path, c, t):
+            name = str(getattr(path[-1], "key", ""))
+            if name == "idx":
+                return c.at[slot].set(0)
+            if c.ndim >= 2 and c.shape[1] == self.slots:
+                return c.at[:, slot].set(t[:, slot])
+            if c.ndim >= 1 and c.shape[0] == self.slots:
+                return c.at[slot].set(t[slot])
+            return c
+
+        return jax.tree_util.tree_map_with_path(reset, cache, self._template)
+
+    def _admit(self) -> None:
+        for s in range(self.slots):
+            if self.slot_req[s] is None and self.queue:
+                self.slot_req[s] = self.queue.popleft()
+                self.cache = self._reset_slot(self.cache, s)
+
+    # ------------------------------------------------------------------
+    def step(self) -> None:
+        feed = np.zeros((self.slots, 1), np.int32)
+        for s, req in enumerate(self.slot_req):
+            if req is None:
+                continue
+            if req.prefilling:
+                feed[s, 0] = req.prompt[req.fed]
+            else:
+                feed[s, 0] = req.generated[-1]
+        nxt, self.cache = self.decode(self.params, self.cache,
+                                      jnp.asarray(feed))
+        nxt = np.asarray(nxt)[:, 0]
+        self.ticks += 1
+        for s, req in enumerate(self.slot_req):
+            if req is None:
+                continue
+            if req.prefilling:
+                req.fed += 1
+                if not req.prefilling:      # last prompt token: first output
+                    req.generated.append(int(nxt[s]))
+            else:
+                req.generated.append(int(nxt[s]))
+            if req.done(self.eos_id):
+                self.completed[req.rid] = req.generated[: req.max_new_tokens]
+                self.slot_req[s] = None
+        self._admit()
+
+    @property
+    def busy(self) -> bool:
+        return bool(self.queue) or any(r is not None for r in self.slot_req)
+
+    def run(self, reqs: Iterable[Request], *, max_ticks: int = 100_000
+            ) -> dict[int, list[int]]:
+        self.submit(reqs)
+        while self.busy and self.ticks < max_ticks:
+            self.step()
+        return self.completed

@@ -1,0 +1,7 @@
+"""Pytest config.  NOTE: deliberately does NOT set XLA_FLAGS -- smoke tests
+and benches must see the real single CPU device; only launch/dryrun.py (and
+the subprocess in test_dryrun_small) force 512/4 placeholder devices."""
+
+
+def pytest_configure(config):
+    config.addinivalue_line("markers", "slow: long-running integration test")

@@ -1,0 +1,49 @@
+"""Collective-census parser: wire-byte math on synthetic post-SPMD HLO."""
+import pytest
+
+pytest.importorskip("jax")
+
+from repro.launch import lowering  # noqa: E402  (safe: no device init)
+
+HLO = """
+HloModule jit_step
+
+%fused (a: f32[16,128]) -> f32[16,128] {
+  ROOT %x = f32[16,128] parameter(0)
+}
+
+ENTRY %main {
+  %ar = f32[16,128]{1,0} all-reduce(%p0), channel_id=1, replica_groups=[16,16]<=[256], to_apply=%add
+  %ag = bf16[64,256]{1,0} all-gather(%p1), channel_id=2, replica_groups=[32,8]<=[256], dimensions={0}
+  %rs = f32[8,128]{1,0} reduce-scatter(%p2), channel_id=3, replica_groups=[64,4]<=[256], dimensions={0}, to_apply=%add
+  %a2a = bf16[4,64]{1,0} all-to-all(%p3), channel_id=4, replica_groups={{0,1,2,3},{4,5,6,7}}, dimensions={0}
+  %cp = u8[1024]{0} collective-permute(%p4), channel_id=5, source_target_pairs={{0,1}}
+  %tuple_ar = (f32[2,2]{1,0}, f32[4]{0}) all-reduce(%p5, %p6), channel_id=6, replica_groups=[2,128]<=[256], to_apply=%add
+}
+"""
+
+
+def test_census_wire_bytes():
+    c = lowering.collective_census(HLO)
+    # all-reduce: 2*(15/16) * 16*128*4
+    assert c["all-reduce"]["count"] == 2
+    ar1 = 2 * (15 / 16) * 16 * 128 * 4
+    ar2 = 2 * (127 / 128) * (2 * 2 * 4 + 4 * 4)
+    assert c["all-reduce"]["wire_bytes"] == pytest.approx(ar1 + ar2)
+    # all-gather: (7/8) * 64*256*2
+    assert c["all-gather"]["wire_bytes"] == pytest.approx((7 / 8) * 64 * 256 * 2)
+    # reduce-scatter: (N-1) * result = 3 * 8*128*4
+    assert c["reduce-scatter"]["wire_bytes"] == pytest.approx(3 * 8 * 128 * 4)
+    # all-to-all with brace groups of size 4: (3/4) * 4*64*2
+    assert c["all-to-all"]["wire_bytes"] == pytest.approx((3 / 4) * 4 * 64 * 2)
+    # permute: full result bytes
+    assert c["collective-permute"]["wire_bytes"] == pytest.approx(1024)
+    assert lowering.census_total(c) == pytest.approx(
+        ar1 + ar2 + (7 / 8) * 64 * 256 * 2 + 3 * 8 * 128 * 4
+        + (3 / 4) * 4 * 64 * 2 + 1024
+    )
+
+
+def test_census_ignores_non_collectives():
+    c = lowering.collective_census("%x = f32[8] add(%a, %b)\n")
+    assert lowering.census_total(c) == 0.0

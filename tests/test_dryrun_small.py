@@ -1,0 +1,75 @@
+"""Miniature dry-run: lower+compile representative cells on a (2,2) mesh of
+4 forced host devices, in a subprocess (device count locks at jax init).
+
+This is the CI-scale version of launch/dryrun.py: same rules, same specs,
+same step builders -- only the mesh and the model dims are small.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import sys, json, dataclasses
+sys.path.insert(0, "src")
+import jax
+from repro.configs import get_config, reduce_for_smoke
+from repro.configs.shapes import ShapeSpec, SHAPES
+import repro.configs.shapes as shapes_mod
+from repro.launch.mesh import make_test_mesh
+from repro.launch import lowering
+
+mesh = make_test_mesh((2, 2), ("data", "model"))
+out = {}
+# small shape cells so compiles stay subsecond
+shapes_mod.SHAPES = {
+    "train_4k": ShapeSpec("train_4k", "train", 64, 8),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 128, 4),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 128, 4),
+    "long_500k": ShapeSpec("long_500k", "decode", 256, 1),
+}
+CASES = [
+    ("qwen2-0.5b", "train_4k"),
+    ("qwen3-moe-30b-a3b", "train_4k"),
+    ("zamba2-1.2b", "long_500k"),
+    ("xlstm-1.3b", "decode_32k"),
+    ("whisper-tiny", "prefill_32k"),
+    ("grok-1-314b", "decode_32k"),
+]
+import repro.launch.lowering as L
+_orig = L.cell_config
+def small_cell_config(arch, *, padded, tp=16):
+    cfg = reduce_for_smoke(get_config(arch))
+    if padded:
+        cfg, changes = cfg.padded_for_mesh(tp)
+        return cfg, changes
+    return cfg, {}
+L.cell_config = small_cell_config
+
+for arch, shape in CASES:
+    cell = L.lower_cell(arch, shape, mesh, padded=True)
+    compiled = cell.lowered.compile()
+    cost = L.cost_stats(compiled)
+    assert cost["flops"] > 0
+    out[f"{arch}:{shape}"] = "ok"
+print(json.dumps(out))
+"""
+
+
+@pytest.mark.slow
+def test_small_mesh_dryrun():
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    res = subprocess.run(
+        [sys.executable, "-c", SCRIPT], capture_output=True, text=True,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        env=env, timeout=560,
+    )
+    assert res.returncode == 0, res.stderr[-3000:]
+    report = json.loads(res.stdout.strip().splitlines()[-1])
+    assert all(v == "ok" for v in report.values()), report
+    assert len(report) == 6
