@@ -1,4 +1,5 @@
-"""Roofline report: three terms per (arch x shape x mesh) from the dry-run.
+"""Roofline report: three terms per (arch x shape x mesh) from the dry-run,
+plus the analytic kernel-plan table (predicted balance / waste per family).
 
 Reads results/dryrun.json (written by launch/dryrun.py, optionally with
 --costs unit-extrapolated numbers) and emits the SSRoofline table:
@@ -73,12 +74,45 @@ def terms(rec: dict) -> dict | None:
     }
 
 
+# Representative production shapes for the analytic kernel-plan table.
+PLAN_CASES = [
+    ("stream.triad", (2 ** 24,), "float32"),
+    ("triad", (2 ** 24,), "float32"),
+    ("jacobi", (4000, 4000), "float32"),
+    ("lbm.ivjk", (19, 100, 100, 100), "float32"),
+    ("rmsnorm", (4096, 5760), "bfloat16"),
+    ("xent", (4096, 122753), "float32"),
+]
+
+
+def planner_rows() -> list[tuple[str, float, str]]:
+    """The planner's analytic predictions per kernel family: channel balance
+    under the planned skews vs the naive layout, and the padding waste the
+    plan pays for whole-tile DMAs.  No dry-run needed -- this is the 'no
+    trial and error' table."""
+    from repro.core import planner
+
+    out = []
+    for kernel, shape, dtype in PLAN_CASES:
+        p = planner.plan_kernel(kernel, shape, dtype)
+        out.append((
+            f"plan.{kernel}",
+            0.0,
+            f"balance={p.predicted_balance:.2f};naive={p.naive_balance:.2f};"
+            f"waste={p.waste:.4f};"
+            f"block={'x'.join(str(b) for b in p.block_shape)}",
+        ))
+    return out
+
+
 def rows(path: str = "results/dryrun.json") -> list[tuple[str, float, str]]:
+    out = planner_rows()
     if not os.path.exists(path):
-        return [("roofline.missing", 0.0, f"run launch/dryrun.py --costs ({path})")]
+        out.append(("roofline.missing", 0.0,
+                    f"run launch/dryrun.py --costs ({path})"))
+        return out
     with open(path) as f:
         recs = json.load(f)
-    out = []
     for r in sorted(recs, key=lambda r: (r["mesh"], r["arch"], r["shape"])):
         name = f"roofline.{r['mesh']}.{r['arch']}.{r['shape']}"
         if r.get("status") == "skipped":
@@ -100,3 +134,10 @@ def rows(path: str = "results/dryrun.json") -> list[tuple[str, float, str]]:
             f"roofline_frac={t['roofline_fraction']:.2f}",
         ))
     return out
+
+
+if __name__ == "__main__":
+    from repro.core import planner
+
+    for kernel, shape, dtype in PLAN_CASES:
+        print(planner.explain(kernel, shape, dtype))

@@ -4,12 +4,16 @@
   2. vector-triad skew (Fig. 4)    -- closed-form offsets == exhaustive,
   3. Jacobi parameters (SS2.3)     -- align=512, shift=128, static-1,
   4. LBM layout choice (Fig. 7)    -- ivjk auto-skew vs soa, N%64 hazard,
-  5. MoE expert placement          -- the same skew rule at pod scale.
+  5. MoE expert placement          -- the same skew rule at pod scale,
+  6. kernel plans (planner)        -- the closed loop: signature -> padded
+                                      shape, VMEM block, skews, predicted
+                                      balance, waste.
 
 Run:  PYTHONPATH=src python examples/layout_autotune.py
 """
 import numpy as np
 
+from repro.core import planner
 from repro.core.aliasing import InterleavedMemoryModel, exhaustive_best_skews
 from repro.core.autotune import StreamSignature, plan_streams
 from repro.core.sharding_skew import layer_skew_gain
@@ -51,6 +55,20 @@ def main() -> None:
     naive, skewed = layer_skew_gain(load, n_devices=16, n_layers=48)
     print(f"  worst-device load (max/mean): naive={naive:.2f} "
           f"skewed={skewed:.2f}  ({naive / skewed:.1f}x smoother)")
+
+    print("== 6. kernel plans: analysis -> execution, no trial and error ==")
+    for kernel, shape, dtype in [
+        ("stream.triad", (2 ** 24,), "float32"),
+        ("triad", (8191,), "float32"),
+        ("jacobi", (998, 1000), "float32"),
+        ("lbm.ivjk", (19, 100, 100, 100), "float32"),
+        ("rmsnorm", (4096, 5760), "bfloat16"),
+        ("xent", (4096, 122753), "float32"),
+    ]:
+        print(planner.explain(kernel, shape, dtype))
+    info = planner.plan_cache_info()
+    print(f"  plan cache: {info['size']} plans, "
+          f"{info['hits']} hits / {info['misses']} misses")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,8 @@
+#!/usr/bin/env bash
+# Tier-1 fast suite: the full test matrix minus the slow subprocess
+# integration tests (pipeline/dry-run compiles), so it finishes in well
+# under a minute.  Run the complete suite with:
+#   PYTHONPATH=src python -m pytest -q
+set -euo pipefail
+cd "$(dirname "$0")/.."
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" exec python -m pytest -q -m "not slow" "$@"

@@ -3,11 +3,20 @@ generalized for TPU. See DESIGN.md SS2-3."""
 from repro.core.aliasing import InterleavedMemoryModel, Stream, analytic_skews
 from repro.core.autotune import LayoutPlan, StreamSignature, plan_streams
 from repro.core.layout import LANES, SUBLANES, LayoutPolicy, PaddedDim, round_up
+from repro.core.planner import (
+    KernelPlan,
+    clear_plan_cache,
+    explain,
+    plan_cache_info,
+    plan_kernel,
+)
 from repro.core.segmented import SegmentedArray, seg_map, seg_triad
 
 __all__ = [
     "InterleavedMemoryModel", "Stream", "analytic_skews",
     "LayoutPlan", "StreamSignature", "plan_streams",
     "LANES", "SUBLANES", "LayoutPolicy", "PaddedDim", "round_up",
+    "KernelPlan", "plan_kernel", "plan_cache_info", "clear_plan_cache",
+    "explain",
     "SegmentedArray", "seg_map", "seg_triad",
 ]

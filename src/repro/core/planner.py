@@ -1,0 +1,388 @@
+"""Layout planner: close the loop from stream analysis to Pallas execution.
+
+The paper's headline claim (SS2.3) is that optimal padding/skew parameters
+"can be obtained by analyzing the data access properties of the loop kernel,
+together with some knowledge about the mapping between addresses and memory
+controllers.  No trial and error is required."  This module is that claim
+made executable for the TPU port: each kernel family declares its
+``StreamSignature`` (how many read/write streams of what element size), and
+the planner derives -- in closed form, no search --
+
+  * the padded *physical* shape (lane/sublane tileable, optionally widened
+    for a tensor-parallel mesh axis),
+  * the Pallas block shape (``choose_block_shape``: whole-line DMAs that fit
+    the VMEM budget with one buffer per resident stream),
+  * the per-stream skews and segment shift (``plan_streams``), scored under
+    the interleaved-memory conflict model.
+
+``predicted_balance`` evaluates the *whole* plan: stream k skewed by
+k x channel-step AND concurrent segments shifted by one channel step, which
+is what guarantees full channel coverage for any stream count (the paper's
+Jacobi case: 2 streams alone cover only 2 of 4 controllers; the segment
+shift supplies the rest).  ``naive_balance`` scores the same streams with no
+skew and period-aliased segments -- the paper's 4x collapse -- so
+``explain()`` reports the analytically-predicted gain.
+
+Plans are memoized in a process-level cache keyed on
+``(kernel, shape, dtype, mesh, model)`` so repeated wrapper calls (and
+re-traces under jit) reuse the same ``KernelPlan`` object.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Mapping
+
+import numpy as np
+
+from repro.core.aliasing import InterleavedMemoryModel, Stream
+from repro.core.autotune import LayoutPlan, StreamSignature, plan_streams
+from repro.core.layout import (
+    LANES,
+    SUBLANES,
+    VMEM_BYTES,
+    cdiv,
+    choose_block_shape,
+    round_down,
+    round_up,
+)
+
+# Widest 1-D reshape width the planner will choose: long enough that every
+# DMA moves whole VREG tiles with low per-transfer overhead, small enough
+# that n_streams blocks of any planned kernel fit VMEM comfortably.
+MAX_WIDTH = 4096
+
+# The paper's per-kernel "data access properties" table: how many read and
+# write streams each kernel family drives against HBM.  Element size is
+# rebound to the actual dtype at planning time.
+FAMILIES: dict[str, StreamSignature] = {
+    "stream.copy": StreamSignature(n_read=1, n_write=1),
+    "stream.scale": StreamSignature(n_read=1, n_write=1),
+    "stream.add": StreamSignature(n_read=2, n_write=1),
+    "stream.triad": StreamSignature(n_read=2, n_write=1),
+    "triad": StreamSignature(n_read=3, n_write=1),          # Schoenauer B+C*D
+    "jacobi": StreamSignature(n_read=1, n_write=1),         # rows stream once
+    "lbm.soa": StreamSignature(n_read=19, n_write=19),      # D3Q19 collide
+    "lbm.ivjk": StreamSignature(n_read=19, n_write=19),
+    "rmsnorm": StreamSignature(n_read=2, n_write=1),        # x, scale -> y
+    "rmsnorm.gated": StreamSignature(n_read=3, n_write=1),  # x, z, scale -> y
+    "xent": StreamSignature(n_read=2, n_write=1),           # logits, labels
+}
+
+# D3Q19 direction count, needed for the LBM block geometry.  Kept local so
+# core never imports the kernels package.
+_LBM_Q = 19
+
+# VMEM-resident buffer count per family when it differs from the HBM stream
+# count + 1: jacobi's three shifted row views are distinct Pallas operands
+# even though they stream each source row from HBM only once.
+VMEM_BUFFERS: dict[str, int] = {"jacobi": 4}
+
+# Families whose kernels tile the minor dim too (blocked columns).  All
+# other 2-D kernels stream full-width row blocks, so their row budget must
+# be charged against the whole padded width.
+COL_TILED = frozenset({"xent"})
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelPlan:
+    """Everything a kernel wrapper needs to lay its arrays out.
+
+    Frozen and hashable so wrappers can pass it as a jit-static argument;
+    identical logical problems therefore share both the plan *and* the
+    compiled executable.
+    """
+
+    kernel: str
+    logical_shape: tuple[int, ...]
+    dtype: str
+    padded_shape: tuple[int, ...]
+    block_shape: tuple[int, ...]
+    signature: StreamSignature
+    layout: LayoutPlan
+    naive_balance: float
+    mesh: tuple[tuple[str, int], ...] = ()
+
+    # ---- geometry --------------------------------------------------------
+    @property
+    def rows(self) -> int:
+        return self.padded_shape[0]
+
+    @property
+    def width(self) -> int:
+        return self.padded_shape[-1]
+
+    @property
+    def block_rows(self) -> int:
+        return self.block_shape[0]
+
+    @property
+    def block_cols(self) -> int:
+        return self.block_shape[-1]
+
+    @property
+    def grid(self) -> tuple[int, ...]:
+        return tuple(cdiv(p, b) for p, b in zip(self.padded_shape, self.block_shape))
+
+    # ---- accounting ------------------------------------------------------
+    @property
+    def logical_elems(self) -> int:
+        n = 1
+        for s in self.logical_shape:
+            n *= s
+        return n
+
+    @property
+    def padded_elems(self) -> int:
+        n = 1
+        for s in self.padded_shape:
+            n *= s
+        return n
+
+    @property
+    def waste(self) -> float:
+        """Fraction of the physical footprint that is padding."""
+        p = self.padded_elems
+        return (p - self.logical_elems) / p if p else 0.0
+
+    @property
+    def predicted_balance(self) -> float:
+        return self.layout.predicted_balance
+
+    def explain(self) -> str:
+        """Human-readable report: predicted balance, waste, block geometry."""
+        sig = self.signature
+        grid = "x".join(str(g) for g in self.grid)
+        block = "x".join(str(b) for b in self.block_shape)
+        return (
+            f"plan[{self.kernel}] logical={self.logical_shape} {self.dtype}"
+            f" -> physical {self.padded_shape}, block {block}, grid {grid}\n"
+            f"  streams: {sig.n_read}R+{sig.n_write}W x {sig.elem_bytes}B"
+            f"  align={self.layout.align_bytes}B"
+            f" offsets={self.layout.offsets_bytes}B"
+            f" segment-shift={self.layout.segment_shift_bytes}B\n"
+            f"  predicted balance {self.predicted_balance:.2f}"
+            f" (naive {self.naive_balance:.2f}),"
+            f" waste {self.waste:.1%}"
+            f" ({self.padded_elems - self.logical_elems} pad elems)"
+        )
+
+
+# ---------------------------------------------------------------------------
+# Plan cache
+# ---------------------------------------------------------------------------
+
+_CACHE: dict[tuple, KernelPlan] = {}
+_STATS = {"hits": 0, "misses": 0}
+_LOCK = threading.RLock()
+_DEFAULT_MODEL = InterleavedMemoryModel()
+
+
+def _mesh_key(mesh) -> tuple[tuple[str, int], ...]:
+    if mesh is None:
+        return ()
+    if hasattr(mesh, "axis_names") and hasattr(mesh, "devices"):
+        return tuple(zip(tuple(mesh.axis_names), tuple(mesh.devices.shape)))
+    if isinstance(mesh, Mapping):
+        return tuple(sorted((str(k), int(v)) for k, v in mesh.items()))
+    return tuple((str(k), int(v)) for k, v in mesh)
+
+
+def plan_kernel(
+    kernel: str,
+    shape,
+    dtype,
+    *,
+    mesh=None,
+    model: InterleavedMemoryModel | None = None,
+) -> KernelPlan:
+    """Memoized analytic plan for ``kernel`` on a logical ``shape``/``dtype``.
+
+    ``mesh`` (a jax Mesh, a mapping, or ``(axis, size)`` pairs) widens the
+    minor-dim padding so every model-axis shard stays lane-aligned.
+    """
+    if kernel not in FAMILIES:
+        raise KeyError(
+            f"unknown kernel family {kernel!r}; known: {sorted(FAMILIES)}"
+        )
+    dt = np.dtype(dtype)
+    mesh_key = _mesh_key(mesh)
+    model = model or _DEFAULT_MODEL
+    key = (kernel, tuple(int(s) for s in shape), dt.name, mesh_key, model)
+    with _LOCK:
+        plan = _CACHE.get(key)
+        if plan is not None:
+            _STATS["hits"] += 1
+            return plan
+        _STATS["misses"] += 1
+        plan = _plan_uncached(kernel, key[1], dt, mesh_key, model)
+        _CACHE[key] = plan
+        return plan
+
+
+def plan_cache_info() -> dict[str, int]:
+    with _LOCK:
+        return {"hits": _STATS["hits"], "misses": _STATS["misses"],
+                "size": len(_CACHE)}
+
+
+def clear_plan_cache() -> None:
+    with _LOCK:
+        _CACHE.clear()
+        _STATS["hits"] = _STATS["misses"] = 0
+
+
+def explain(kernel: str, shape, dtype, *, mesh=None,
+            model: InterleavedMemoryModel | None = None) -> str:
+    """Convenience: plan and render the report in one call."""
+    return plan_kernel(kernel, shape, dtype, mesh=mesh, model=model).explain()
+
+
+# ---------------------------------------------------------------------------
+# Closed-form planning rules
+# ---------------------------------------------------------------------------
+
+def _plan_uncached(kernel: str, shape: tuple[int, ...], dt: np.dtype,
+                   mesh_key, model: InterleavedMemoryModel) -> KernelPlan:
+    sig = dataclasses.replace(FAMILIES[kernel], elem_bytes=dt.itemsize)
+    n_buffers = VMEM_BUFFERS.get(kernel, sig.n_streams + 1)
+    if kernel.startswith("lbm."):
+        padded, block = _plan_lbm(kernel, shape, sig)
+    elif len(shape) == 1:
+        padded, block = _plan_1d(shape[0], sig, n_buffers)
+    elif len(shape) == 2:
+        tp = dict(mesh_key).get("model", 1)
+        padded, block = _plan_2d(shape, sig, tp, n_buffers,
+                                 col_tiled=kernel in COL_TILED)
+    else:
+        raise ValueError(
+            f"{kernel}: cannot plan rank-{len(shape)} shape {shape}"
+        )
+    layout = _plan_layout(sig, model)
+    naive = _naive_balance(sig, model)
+    return KernelPlan(
+        kernel=kernel,
+        logical_shape=shape,
+        dtype=dt.name,
+        padded_shape=padded,
+        block_shape=block,
+        signature=sig,
+        layout=layout,
+        naive_balance=naive,
+        mesh=mesh_key,
+    )
+
+
+def _plan_layout(sig: StreamSignature, model: InterleavedMemoryModel) -> LayoutPlan:
+    """The analytic skew plan, scored as deployed: n_channels concurrent
+    segments whose chunk stride is congruent to one channel step, so skewed
+    streams + shifted segments jointly cover every channel each tick."""
+    step = 1 << model.channel_shift
+    return plan_streams(
+        sig, model,
+        n_threads=model.n_channels,
+        chunk_bytes=model.period_bytes + step,
+    )
+
+
+def _naive_balance(sig: StreamSignature, model: InterleavedMemoryModel) -> float:
+    """Score of the *unplanned* layout: page-aligned streams, period-aliased
+    segments -- every request lands on one controller (paper Fig. 2, offset
+    zero)."""
+    streams = [
+        Stream(base=0, kind="write" if k < sig.n_write else "read")
+        for k in range(sig.n_streams)
+    ]
+    return model.balance(streams, n_threads=model.n_channels,
+                         chunk_bytes=model.period_bytes)
+
+
+def _fit_block(rows: int, width: int, sig: StreamSignature, n_buffers: int,
+               *, col_tiled: bool = False) -> tuple[int, int, int]:
+    """VMEM block for (rows, width): ``n_buffers`` resident blocks, whole
+    lines per DMA, sublane-multiple rows.  Full-width kernels charge the row
+    budget against the whole width (their blocks are (brows, width));
+    col-tiled kernels (online-softmax style) also tile the minor dim.
+
+    A divisor of the row count within half the budgeted block is preferred
+    (zero extra padding at a small block-size cost); failing that, rows are
+    padded *up* to a block multiple (returned as the first element) rather
+    than the block shrunk further: an awkward row count (e.g. a large prime
+    x 8) costs at most one extra block of padding instead of collapsing
+    every DMA to 8 rows."""
+    brows, bcols = choose_block_shape(
+        rows, width,
+        bytes_per_el=sig.elem_bytes,
+        n_buffers=n_buffers,
+        max_block_cols=MAX_WIDTH if col_tiled else width,
+    )
+    bcols = min(bcols, width)
+    while width % bcols:
+        bcols -= LANES
+    bcols = max(bcols, LANES)
+    brows = max(min(brows, rows), SUBLANES)
+    for cand in range(brows, max(brows // 2, SUBLANES) - 1, -SUBLANES):
+        if rows % cand == 0:
+            return rows, cand, bcols
+    return round_up(rows, brows), brows, bcols
+
+
+def _plan_1d(n: int, sig: StreamSignature,
+             n_buffers: int) -> tuple[tuple[int, ...], tuple[int, ...]]:
+    """1-D stream of n elements -> (rows, width) whole-tile 2-D layout.
+
+    The width is the smallest lane multiple that keeps the sublane-padded
+    row count minimal (waste shrinks toward one tile), capped at MAX_WIDTH
+    so blocks stay within the VMEM budget for any stream count.
+    """
+    n = max(int(n), 1)
+    width = round_up(min(max(cdiv(n, SUBLANES), LANES), MAX_WIDTH), LANES)
+    rows = round_up(cdiv(n, width), SUBLANES)
+    rows, brows, bcols = _fit_block(rows, width, sig, n_buffers)
+    return (rows, width), (brows, bcols)
+
+
+def _plan_2d(shape: tuple[int, ...], sig: StreamSignature, tp: int,
+             n_buffers: int, *,
+             col_tiled: bool) -> tuple[tuple[int, ...], tuple[int, ...]]:
+    """(rows, cols) kernel: sublane-pad rows, lane-pad cols (x tp when the
+    minor dim is sharded over a model axis)."""
+    r, c = shape
+    rows = round_up(max(int(r), 1), SUBLANES)
+    width = round_up(max(int(c), 1), LANES * max(int(tp), 1))
+    rows, brows, bcols = _fit_block(rows, width, sig, n_buffers,
+                                    col_tiled=col_tiled)
+    return (rows, width), (brows, bcols)
+
+
+def _plan_lbm(kernel: str, shape: tuple[int, ...],
+              sig: StreamSignature) -> tuple[tuple[int, ...], tuple[int, ...]]:
+    """D3Q19 collision layouts.  ``shape`` is the lattice (Q, X, Y, Z).
+
+    soa : f stored (Q, S)        -- block (Q, bs), bs sized so 2 buffers of
+                                    all Q direction rows fit VMEM.
+    ivjk: f stored (S/128, Q, L) -- directions interleaved at lane
+                                    granularity; block is bsb super-rows.
+    """
+    q = int(shape[0])
+    if q != _LBM_Q:
+        raise ValueError(f"{kernel}: leading dim must be Q={_LBM_Q}, got {q}")
+    s = 1
+    for d in shape[1:]:
+        s *= int(d)
+    s = max(s, 1)
+    elem = sig.elem_bytes
+    if kernel == "lbm.soa":
+        budget = round_down(
+            min(VMEM_BYTES // max(q * elem * 2, 1), MAX_WIDTH), LANES
+        )
+        bs = max(min(budget, round_up(s, LANES)), LANES)
+        spad = round_up(s, bs)
+        return (q, spad), (q, bs)
+    # ivjk: super-block rows of (Q, 128) slabs
+    budget = round_down(
+        min(VMEM_BYTES // max(q * LANES * elem * 2, 1), 64), SUBLANES
+    )
+    bsb = max(min(budget, round_up(cdiv(s, LANES), SUBLANES)), SUBLANES)
+    spad = round_up(s, bsb * LANES)
+    return (spad // LANES, q, LANES), (bsb, q, LANES)

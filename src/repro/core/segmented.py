@@ -104,7 +104,10 @@ class SegmentedArray:
             jax.lax.dynamic_slice(seg, (p,), (L,))
             for seg, L, p in zip(self.segments, self.lengths, self.phases)
         ]
-        return jnp.concatenate(parts) if parts else jnp.zeros((0,))
+        if parts:
+            return jnp.concatenate(parts)
+        dtype = self.segments[0].dtype if self.segments else jnp.float32
+        return jnp.zeros((0,), dtype)
 
     # ---- metadata ----------------------------------------------------------
     @property

@@ -6,7 +6,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core.layout import LANES, SUBLANES, round_up
+from repro.core.planner import plan_kernel
 from repro.kernels.jacobi import kernel
 
 
@@ -14,19 +14,20 @@ from repro.kernels.jacobi import kernel
 def jacobi_step(src: jax.Array) -> jax.Array:
     """One aligned Pallas sweep on an (N, M) grid (boundaries copied).
 
-    Layout policy (the paper's SS2.3 parameters, TPU form): columns padded to
-    a 128-lane multiple, interior row count padded to a sublane multiple;
-    the three shifted views give each block its halo without overlap reads.
+    Layout policy (the paper's SS2.3 parameters, TPU form) comes from the
+    planner: columns padded to a 128-lane multiple, interior row count padded
+    to a sublane multiple, block rows sized to the VMEM budget; the three
+    shifted views give each block its halo without overlap reads.
     """
     n, m = src.shape
-    width = round_up(m, LANES)
     rows = n - 2
-    prow = round_up(rows, SUBLANES)
+    plan = plan_kernel("jacobi", (rows, m), src.dtype)
+    prow, width = plan.padded_shape
     padded = jnp.pad(src, ((0, prow - rows), (0, width - m)))
     sa = padded[:-2][:prow]
     sb = padded[2:][:prow]
     sl = padded[1:-1][:prow]
-    out = kernel.jacobi_rows(sa, sb, sl, n_cols=m)
+    out = kernel.jacobi_rows(sa, sb, sl, n_cols=m, brows=plan.block_rows)
     return src.at[1:-1, :].set(out[:rows, :m])
 
 

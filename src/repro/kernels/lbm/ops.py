@@ -9,6 +9,7 @@ import jax.numpy as jnp
 from repro.core.aliasing import InterleavedMemoryModel
 from repro.core.autotune import choose_layout
 from repro.core.layout import round_up
+from repro.core.planner import plan_kernel
 from repro.kernels.lbm import kernel, ref
 from repro.kernels.lbm.ref import Q
 
@@ -35,18 +36,22 @@ def lbm_step(
     layout: str = "ivjk",
 ) -> jax.Array:
     """One D3Q19 step on f[v, X, Y, Z]: lax-roll propagation + Pallas
-    collision in the chosen stream layout."""
+    collision in the chosen stream layout.  Pad multiples and block shapes
+    come from the planner's VMEM-budget analysis of the 19+19 streams."""
     if layout not in LAYOUTS:
         raise ValueError(f"layout must be one of {LAYOUTS}")
     shape = f.shape
     fprop = ref.propagate(f)
     if layout == "soa":
-        flat, s = _flatten_pad(fprop, 2048)
-        post = kernel.collide_soa(flat, omega)[:, :s].reshape(shape)
+        plan = plan_kernel("lbm.soa", shape, f.dtype)
+        flat, s = _flatten_pad(fprop, plan.block_cols)
+        post = kernel.collide_soa(flat, omega, bs=plan.block_cols)
+        post = post[:, :s].reshape(shape)
     else:
-        flat, s = _flatten_pad(fprop, 16 * 128)
+        plan = plan_kernel("lbm.ivjk", shape, f.dtype)
+        flat, s = _flatten_pad(fprop, plan.block_rows * 128)
         ivjk = flat.reshape(Q, -1, 128).transpose(1, 0, 2)  # (S/128, Q, 128)
-        post = kernel.collide_ivjk(ivjk, omega)
+        post = kernel.collide_ivjk(ivjk, omega, bsb=plan.block_rows)
         post = post.transpose(1, 0, 2).reshape(Q, -1)[:, :s].reshape(shape)
     if mask is not None:
         post = jnp.where(mask[None], post, f)

@@ -1,4 +1,4 @@
-"""Jitted wrappers: flatten leading dims, lane-pad the feature dim."""
+"""Jitted wrappers: flatten leading dims, planner-derived lane padding."""
 from __future__ import annotations
 
 import functools
@@ -6,35 +6,36 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core.layout import LANES, SUBLANES, round_up
+from repro.core.planner import plan_kernel
 from repro.kernels.rmsnorm import kernel
 
 
-def _prep(x: jax.Array):
+def _prep(x: jax.Array, family: str):
     *lead, d = x.shape
     rows = 1
     for s in lead:
         rows *= s
+    plan = plan_kernel(family, (rows, d), x.dtype)
+    rp, wp = plan.padded_shape
     x2 = x.reshape(rows, d)
-    wp = round_up(d, LANES)
-    rp = round_up(rows, SUBLANES)
     x2 = jnp.pad(x2, ((0, rp - rows), (0, wp - d)))
-    return x2, lead, rows, d, wp
+    return x2, lead, rows, d, wp, plan
 
 
 @functools.partial(jax.jit, static_argnames=("eps",))
 def rmsnorm(x: jax.Array, scale: jax.Array, *, eps: float = 1e-6) -> jax.Array:
-    x2, lead, rows, d, wp = _prep(x)
+    x2, lead, rows, d, wp, plan = _prep(x, "rmsnorm")
     s = jnp.pad(scale, (0, wp - d))
-    y = kernel.rmsnorm2d(x2, s, d_logical=d, eps=eps)
+    y = kernel.rmsnorm2d(x2, s, d_logical=d, eps=eps, brows=plan.block_rows)
     return y[:rows, :d].reshape(*lead, d)
 
 
 @functools.partial(jax.jit, static_argnames=("eps",))
 def gated_rmsnorm(x: jax.Array, z: jax.Array, scale: jax.Array, *,
                   eps: float = 1e-6) -> jax.Array:
-    x2, lead, rows, d, wp = _prep(x)
-    z2 = _prep(z)[0]
+    x2, lead, rows, d, wp, plan = _prep(x, "rmsnorm.gated")
+    z2 = _prep(z, "rmsnorm.gated")[0]
     s = jnp.pad(scale, (0, wp - d))
-    y = kernel.gated_rmsnorm2d(x2, z2, s, d_logical=d, eps=eps)
+    y = kernel.gated_rmsnorm2d(x2, z2, s, d_logical=d, eps=eps,
+                               brows=plan.block_rows)
     return y[:rows, :d].reshape(*lead, d)

@@ -1,10 +1,13 @@
 """Jitted public wrappers for the STREAM kernels (1-D API).
 
-The wrapper owns the layout decision: pad+reshape the 1-D array to whole
-(8,128)-tileable 2-D form (``to_tiles``), run the Pallas kernel, and slice
-the logical result back out.  ``bytes_moved`` reports STREAM-convention
-traffic (no RFO) and ``bytes_moved_rfo`` the true traffic, mirroring the
-paper's 4/3 remark.
+The wrapper owns the layout decision, but no longer hard-codes it: the
+analytic planner (``core/planner``) derives the padded 2-D shape and the
+VMEM block from each kernel's stream signature, memoized per
+``(kernel, shape, dtype)``.  The wrapper pads+reshapes the 1-D array to the
+planned whole-tile form (``to_tiles``), runs the Pallas kernel over the
+planned blocks, and slices the logical result back out.  ``bytes_moved``
+reports STREAM-convention traffic (no RFO) and ``bytes_moved_rfo`` the true
+traffic, mirroring the paper's 4/3 remark.
 """
 from __future__ import annotations
 
@@ -12,34 +15,58 @@ import functools
 
 import jax
 
+from repro.core.planner import KernelPlan, plan_kernel
 from repro.kernels.stream import kernel
 from repro.kernels.util import from_tiles, to_tiles
 
 
-@functools.partial(jax.jit, static_argnames=("width",))
-def stream_copy(a: jax.Array, *, width: int = 1024) -> jax.Array:
-    a2, n = to_tiles(a, width)
-    return from_tiles(kernel.copy2d(a2), n)
+@functools.partial(jax.jit, static_argnames=("plan",))
+def _copy(a, *, plan):
+    a2, n = to_tiles(a, plan=plan)
+    return from_tiles(kernel.copy2d(a2, brows=plan.block_rows), n)
 
 
-@functools.partial(jax.jit, static_argnames=("width",))
-def stream_scale(c: jax.Array, s: float, *, width: int = 1024) -> jax.Array:
-    c2, n = to_tiles(c, width)
-    return from_tiles(kernel.scale2d(c2, s), n)
+@functools.partial(jax.jit, static_argnames=("plan",))
+def _scale(c, s, *, plan):
+    c2, n = to_tiles(c, plan=plan)
+    return from_tiles(kernel.scale2d(c2, s, brows=plan.block_rows), n)
 
 
-@functools.partial(jax.jit, static_argnames=("width",))
-def stream_add(a: jax.Array, b: jax.Array, *, width: int = 1024) -> jax.Array:
-    a2, n = to_tiles(a, width)
-    b2, _ = to_tiles(b, width)
-    return from_tiles(kernel.add2d(a2, b2), n)
+@functools.partial(jax.jit, static_argnames=("plan",))
+def _add(a, b, *, plan):
+    a2, n = to_tiles(a, plan=plan)
+    b2, _ = to_tiles(b, plan=plan)
+    return from_tiles(kernel.add2d(a2, b2, brows=plan.block_rows), n)
 
 
-@functools.partial(jax.jit, static_argnames=("width",))
-def stream_triad(b: jax.Array, c: jax.Array, s: float, *, width: int = 1024) -> jax.Array:
-    b2, n = to_tiles(b, width)
-    c2, _ = to_tiles(c, width)
-    return from_tiles(kernel.triad2d(b2, c2, s), n)
+@functools.partial(jax.jit, static_argnames=("plan",))
+def _triad(b, c, s, *, plan):
+    b2, n = to_tiles(b, plan=plan)
+    c2, _ = to_tiles(c, plan=plan)
+    return from_tiles(kernel.triad2d(b2, c2, s, brows=plan.block_rows), n)
+
+
+def stream_copy(a: jax.Array, *, plan: KernelPlan | None = None) -> jax.Array:
+    plan = plan or plan_kernel("stream.copy", a.shape, a.dtype)
+    return _copy(a, plan=plan)
+
+
+def stream_scale(c: jax.Array, s: float, *,
+                 plan: KernelPlan | None = None) -> jax.Array:
+    plan = plan or plan_kernel("stream.scale", c.shape, c.dtype)
+    return _scale(c, s, plan=plan)
+
+
+def stream_add(a: jax.Array, b: jax.Array, *,
+               plan: KernelPlan | None = None) -> jax.Array:
+    plan = plan or plan_kernel("stream.add", a.shape, a.dtype)
+    return _add(a, b, plan=plan)
+
+
+def stream_triad(b: jax.Array, c: jax.Array, s: float, *,
+                 plan: KernelPlan | None = None) -> jax.Array:
+    plan = plan or plan_kernel("stream.triad", b.shape, b.dtype)
+    return _triad(b, c, s, plan=plan)
 
 
 def bytes_moved(op: str, n: int, elem_bytes: int = 8) -> int:

@@ -1,12 +1,15 @@
 """Vector-triad wrappers: aligned, phased, and segmented variants.
 
-``vector_triad``            -- tile-aligned layout (the optimized case).
+``vector_triad``            -- planner-derived tile-aligned layout (the
+                               optimized case): padded shape and VMEM block
+                               come from ``plan_kernel("triad", ...)``.
 ``vector_triad_phased``     -- per-stream element phases, reproducing the
                                paper's offset experiment: each array lives at
                                ``phase[k]`` elements into a padded buffer, so
                                stream k starts at a different lane phase.
 ``vector_triad_segmented``  -- SegmentedArray inputs, one Pallas call per
-                               segment (the segmented-iterator port).
+                               segment (the segmented-iterator port), each
+                               segment planned on its own logical length.
 """
 from __future__ import annotations
 
@@ -15,54 +18,69 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.core.planner import KernelPlan, plan_kernel
 from repro.core.segmented import SegmentedArray, seg_map
 from repro.kernels.triad import kernel
 from repro.kernels.util import from_tiles, to_tiles
 
 
-@functools.partial(jax.jit, static_argnames=("width",))
-def vector_triad(b: jax.Array, c: jax.Array, d: jax.Array, *, width: int = 1024) -> jax.Array:
-    b2, n = to_tiles(b, width)
-    c2, _ = to_tiles(c, width)
-    d2, _ = to_tiles(d, width)
-    return from_tiles(kernel.triad2d(b2, c2, d2), n)
+@functools.partial(jax.jit, static_argnames=("plan",))
+def _triad(b, c, d, *, plan):
+    b2, n = to_tiles(b, plan=plan)
+    c2, _ = to_tiles(c, plan=plan)
+    d2, _ = to_tiles(d, plan=plan)
+    return from_tiles(kernel.triad2d(b2, c2, d2, brows=plan.block_rows), n)
 
 
-@functools.partial(jax.jit, static_argnames=("phases", "width"))
+def vector_triad(b: jax.Array, c: jax.Array, d: jax.Array, *,
+                 plan: KernelPlan | None = None) -> jax.Array:
+    plan = plan or plan_kernel("triad", b.shape, b.dtype)
+    return _triad(b, c, d, plan=plan)
+
+
+@functools.partial(jax.jit, static_argnames=("phases", "plan"))
+def _triad_phased(b, c, d, *, phases, plan):
+    outs = []
+    for x, p in zip((b, c, d), phases):
+        buf = jnp.pad(x, (p, 0))  # stream starts p elements in
+        outs.append(buf[p:])      # logical view back at the data
+    b2, n = to_tiles(outs[0], plan=plan)
+    c2, _ = to_tiles(outs[1], plan=plan)
+    d2, _ = to_tiles(outs[2], plan=plan)
+    return from_tiles(kernel.triad2d(b2, c2, d2, brows=plan.block_rows), n)
+
+
 def vector_triad_phased(
     b: jax.Array,
     c: jax.Array,
     d: jax.Array,
     *,
     phases: tuple[int, int, int] = (0, 0, 0),
-    width: int = 1024,
+    plan: KernelPlan | None = None,
 ) -> jax.Array:
     """Embed stream k at element phase[k]; the kernel then reads shifted
     views.  With non-tile-multiple phases the compiler must materialize
     re-alignment copies -- the cost shows up in HLO bytes (see
     benchmarks/vector_triad.py), which is the dry-run observable for the
     paper's offset sweep."""
-    (n,) = b.shape
-    outs = []
-    for x, p in zip((b, c, d), phases):
-        buf = jnp.pad(x, (p, 0))  # stream starts p elements in
-        outs.append(buf[p:])      # logical view back at the data
-    b2, n = to_tiles(outs[0], width)
-    c2, _ = to_tiles(outs[1], width)
-    d2, _ = to_tiles(outs[2], width)
-    return from_tiles(kernel.triad2d(b2, c2, d2), n)
+    plan = plan or plan_kernel("triad", b.shape, b.dtype)
+    return _triad_phased(b, c, d, phases=tuple(phases), plan=plan)
 
 
 def vector_triad_segmented(
     a: SegmentedArray, b: SegmentedArray, c: SegmentedArray, d: SegmentedArray
 ) -> SegmentedArray:
-    """Segmented-iterator port: per-segment Pallas triad calls."""
+    """Segmented-iterator port: per-segment Pallas triad calls, each segment
+    planned on its own logical length (short segments get narrow tiles)."""
 
     def _one(bb: jax.Array, cc: jax.Array, dd: jax.Array) -> jax.Array:
-        b2, n = to_tiles(bb, 128)
-        c2, _ = to_tiles(cc, 128)
-        d2, _ = to_tiles(dd, 128)
-        return from_tiles(kernel.triad2d(b2, c2, d2), n)
+        seg_plan = plan_kernel("triad", bb.shape, bb.dtype)
+        b2, n = to_tiles(bb, plan=seg_plan)
+        c2, _ = to_tiles(cc, plan=seg_plan)
+        d2, _ = to_tiles(dd, plan=seg_plan)
+        return from_tiles(
+            kernel.triad2d(b2, c2, d2, brows=seg_plan.block_rows), n
+        )
 
     return seg_map(_one, a, b, c, d)
 

@@ -13,22 +13,39 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.layout import LANES, SUBLANES, cdiv, round_up
+from repro.core.planner import KernelPlan
 
 # interpret=True on CPU; real TPUs compile the same kernels natively.
 INTERPRET = jax.default_backend() == "cpu"
 
 
-def to_tiles(x: jax.Array, width: int = 1024) -> tuple[jax.Array, int]:
+def to_tiles(x: jax.Array, width: int | None = None, *,
+             plan: KernelPlan | None = None) -> tuple[jax.Array, int]:
     """Reshape a 1-D array to (rows, width), zero-padding the tail.
 
-    ``width`` must be a multiple of 128 lanes; rows are padded to a multiple
-    of 8 sublanes so the result is exactly tileable.  Returns (tiled, n) with
-    n the logical length for the inverse.
+    The width comes from a ``KernelPlan`` (the planner's analytic choice) or
+    an explicit override; it must be a multiple of 128 lanes.  Rows are
+    padded to a multiple of 8 sublanes so the result is exactly tileable.
+    Returns (tiled, n) with n the logical length for the inverse.
     """
+    (n,) = x.shape
+    if plan is not None:
+        # A plan is only valid for the logical shape it was derived from;
+        # a mismatched plan would silently drop tail rows from the grid.
+        if plan.logical_shape != (n,):
+            raise ValueError(
+                f"plan {plan.kernel} is for shape {plan.logical_shape}, "
+                f"got array of shape {(n,)}"
+            )
+        # Honor the plan's row count (rows may exceed the minimal sublane
+        # padding when rounded up to a whole block).
+        rows, width = plan.padded_shape
+    else:
+        if width is None:
+            raise TypeError("to_tiles requires either width= or plan=")
+        rows = round_up(cdiv(max(n, 1), width), SUBLANES)
     if width % LANES:
         raise ValueError(f"width must be a multiple of {LANES}")
-    (n,) = x.shape
-    rows = round_up(cdiv(max(n, 1), width), SUBLANES)
     pad = rows * width - n
     x2 = jnp.pad(x, (0, pad)) if pad else x
     return x2.reshape(rows, width), n

@@ -1,4 +1,4 @@
-"""Jitted wrapper: padding policy + mean reduction for the xent kernel."""
+"""Jitted wrapper: planner-derived padding policy + mean reduction."""
 from __future__ import annotations
 
 import functools
@@ -7,19 +7,27 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.layout import round_up
+from repro.core.planner import plan_kernel
 from repro.kernels.xent import kernel
 
 
 @functools.partial(jax.jit, static_argnames=("logical_v", "bt", "bv"))
 def xent_mean(logits: jax.Array, labels: jax.Array, *, logical_v: int = 0,
-              bt: int = 256, bv: int = 2048) -> jax.Array:
-    """Mean NLL over (T,) tokens; pads T to bt and V to bv multiples.
+              bt: int | None = None, bv: int | None = None) -> jax.Array:
+    """Mean NLL over (T,) tokens; pads T and V to (bt, bv) tile multiples.
 
-    Padded *tokens* get label 0 against a -inf-masked row contribution of
-    exactly lse-only... they are excluded by weighting instead.
+    The (bt, bv) tile defaults to the planner's choice for this (T, V) and
+    dtype (one online-softmax working set per VMEM budget); explicit bt/bv
+    remain as overrides.  Padded *tokens* get label 0 against a -inf-masked
+    row contribution of exactly lse-only... they are excluded by weighting
+    instead.
     """
     t, v = logits.shape
     logical_v = logical_v or v
+    if bt is None or bv is None:
+        plan = plan_kernel("xent", (t, v), logits.dtype)
+        bt = bt or plan.block_rows
+        bv = bv or plan.block_cols
     tp = round_up(t, bt)
     vp = round_up(v, bv)
     lg = jnp.pad(logits, ((0, tp - t), (0, vp - v)))

@@ -30,6 +30,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs import get_config
 from repro.configs.shapes import SHAPES, ShapeSpec, input_specs, shape_applicable
+from repro.core import planner as planner_lib
 from repro.models import build_model
 from repro.models.params import ParamDef, abstract_params, is_def, map_tree
 from repro.optim.adamw import AdamWConfig
@@ -45,6 +46,27 @@ ICI_BW = 50e9                # B/s / link
 
 COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
                "collective-permute")
+
+
+# ---------------------------------------------------------------------------
+# Kernel layout planning
+# ---------------------------------------------------------------------------
+
+def kernel_plan(kernel: str, shape, dtype, mesh=None) -> planner_lib.KernelPlan:
+    """The lowering path's hook into the analytic layout planner.
+
+    Returns the memoized ``KernelPlan`` for a Pallas kernel family on this
+    mesh -- mesh-aware minor-dim padding included -- so cell lowering and the
+    roofline report consume the same plans the kernel wrappers execute."""
+    return planner_lib.plan_kernel(kernel, shape, dtype, mesh=mesh)
+
+
+def kernel_plan_report(cases, mesh=None) -> str:
+    """Multi-plan ``planner.explain()`` report for (kernel, shape, dtype)
+    triples (the dry-run analogue of the paper's parameter tables)."""
+    return "\n".join(
+        kernel_plan(k, s, d, mesh=mesh).explain() for k, s, d in cases
+    )
 
 
 # ---------------------------------------------------------------------------

@@ -20,11 +20,10 @@ from typing import Callable
 
 import jax
 import jax.numpy as jnp
-try:  # jax >= 0.8
-    from jax import shard_map
-except ImportError:  # pragma: no cover
-    from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
+
+from repro.parallel.shardmap_compat import NO_CHECK as _NO_CHECK
+from repro.parallel.shardmap_compat import shard_map
 
 
 def quantize(g: jax.Array) -> tuple[jax.Array, jax.Array]:
@@ -86,7 +85,7 @@ def dp_compressed_grads(
         local, mesh=mesh,
         in_specs=(pspec_rep, pspec_batch, pspec_rep),
         out_specs=(pspec_rep, pspec_rep),
-        check_vma=False,
+        **_NO_CHECK,
     )
     return fn(params, batch, ef_state)
 

@@ -21,10 +21,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-try:  # jax >= 0.8 moves shard_map to jax.*
-    from jax import shard_map as _shard_map
-except ImportError:  # pragma: no cover
-    from jax.experimental.shard_map import shard_map as _shard_map
+from repro.parallel.shardmap_compat import NO_CHECK as _NO_CHECK
+from repro.parallel.shardmap_compat import shard_map as _shard_map
 
 
 def bubble_fraction(n_stages: int, n_micro: int) -> float:
@@ -98,7 +96,7 @@ def pipeline_apply(
         return outs
 
     fn = _shard_map(run, mesh=mesh, in_specs=in_specs, out_specs=out_spec,
-                    check_vma=False)
+                    **_NO_CHECK)
     out = fn(stage_params, xm)
     return out.reshape(b, *x.shape[1:])
 

@@ -1,0 +1,25 @@
+"""shard_map version compatibility, shared by every call site.
+
+Two things moved across jax versions: the import location (jax >= 0.8 has
+``jax.shard_map``; older versions only ``jax.experimental.shard_map``) and
+the replication-check kwarg (``check_rep`` renamed to ``check_vma``).
+``NO_CHECK`` is the kwargs dict that disables the check under whichever
+name this jax accepts.
+"""
+from __future__ import annotations
+
+import inspect
+
+try:  # jax >= 0.8
+    from jax import shard_map
+except ImportError:  # pragma: no cover
+    from jax.experimental.shard_map import shard_map
+
+_PARAMS = frozenset(inspect.signature(shard_map).parameters)
+NO_CHECK = (
+    {"check_vma": False} if "check_vma" in _PARAMS
+    else {"check_rep": False} if "check_rep" in _PARAMS
+    else {}
+)
+
+__all__ = ["shard_map", "NO_CHECK"]

@@ -1,0 +1,98 @@
+"""Fallback shim for ``hypothesis`` so the tier-1 suite collects offline.
+
+When the real hypothesis package is installed it is re-exported unchanged.
+When it is missing (this repo must run with no network access), a minimal
+stand-in runs each property test over N deterministic pseudo-random examples
+-- no shrinking, no database, just coverage of the same strategy space so
+the invariants are still exercised.
+
+Only the strategy surface the suite uses is implemented: ``integers``,
+``lists``, ``sampled_from``.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    import inspect
+    import random
+
+    _DEFAULT_EXAMPLES = 20
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def example(self, rng: random.Random):
+            return self._draw(rng)
+
+    class strategies:  # noqa: N801 - mimics the hypothesis module name
+        @staticmethod
+        def integers(min_value=0, max_value=2 ** 31 - 1):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+            return _Strategy(lambda rng: rng.choice(elements))
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10):
+            return _Strategy(
+                lambda rng: [
+                    elements.example(rng)
+                    for _ in range(rng.randint(min_size, max_size))
+                ]
+            )
+
+    def settings(max_examples=_DEFAULT_EXAMPLES, **_ignored):
+        def deco(fn):
+            fn._shim_max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(*arg_strats, **kw_strats):
+        """Run the test over deterministic examples.  Positional strategies
+        bind to the test's trailing parameters (hypothesis semantics)."""
+
+        def deco(fn):
+            sig = inspect.signature(fn)
+            params = list(sig.parameters.values())
+            bound = dict(kw_strats)
+            if arg_strats:
+                tail = [p.name for p in params[-len(arg_strats):]]
+                bound.update(zip(tail, arg_strats))
+            remaining = [p for p in params if p.name not in bound]
+
+            def wrapper(*args, **kwargs):
+                # @settings may sit inside @given (attribute on fn) or
+                # outside it (attribute on this wrapper); honor both orders.
+                n = getattr(
+                    wrapper, "_shim_max_examples",
+                    getattr(fn, "_shim_max_examples", _DEFAULT_EXAMPLES),
+                )
+                for i in range(n):
+                    rng = random.Random(
+                        f"{fn.__module__}.{fn.__qualname__}:{i}"
+                    )
+                    drawn = {k: s.example(rng) for k, s in bound.items()}
+                    fn(*args, **kwargs, **drawn)
+
+            # Hide the strategy-bound parameters from pytest's fixture
+            # resolution; only e.g. ``self`` and real fixtures remain.
+            wrapper.__signature__ = sig.replace(parameters=remaining)
+            wrapper.__name__ = fn.__name__
+            wrapper.__qualname__ = fn.__qualname__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            return wrapper
+
+        return deco
+
+
+__all__ = ["HAVE_HYPOTHESIS", "given", "settings", "strategies"]

@@ -2,8 +2,8 @@
 property-based invariants."""
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_compat import given, settings
+from _hypothesis_compat import strategies as st
 
 from repro.core.aliasing import (
     InterleavedMemoryModel, Stream, analytic_skews, exhaustive_best_skews,

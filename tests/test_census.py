@@ -23,6 +23,22 @@ ENTRY %main {
 """
 
 
+def test_kernel_plan_hook_matches_planner():
+    """The lowering path's planner hook returns the same memoized plans the
+    kernel wrappers execute, and the report renders one block per case."""
+    from repro.core import planner
+
+    p = lowering.kernel_plan("xent", (4096, 122753), "float32",
+                             mesh={"model": 16})
+    assert p is planner.plan_kernel("xent", (4096, 122753), "float32",
+                                    mesh={"model": 16})
+    assert p.width % (16 * 128) == 0  # mesh-aware vocab padding
+    cases = [("triad", (8191,), "float32"), ("jacobi", (100, 100), "float32")]
+    report = lowering.kernel_plan_report(cases)
+    assert report.count("plan[") == 2
+    assert "predicted balance" in report
+
+
 def test_census_wire_bytes():
     c = lowering.collective_census(HLO)
     # all-reduce: 2*(15/16) * 16*128*4

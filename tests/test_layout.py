@@ -1,7 +1,7 @@
 """LayoutPolicy / padding math + properties."""
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_compat import given, settings
+from _hypothesis_compat import strategies as st
 
 from repro.core.layout import (
     LANES, SUBLANES, LayoutPolicy, choose_block_shape, round_up,

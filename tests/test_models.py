@@ -5,6 +5,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+# Compile-bound model-zoo sweep (~2 min): full tier-1 only.
+pytestmark = pytest.mark.slow
+
 import repro.models.blocks as blocks_mod
 from repro.configs import ARCHS, get_config, reduce_for_smoke
 from repro.models import build_model

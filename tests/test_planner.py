@@ -1,0 +1,199 @@
+"""Layout planner: cache behavior, plan geometry, balance predictions, and
+wrapper parity on non-tile-multiple shapes (the planner-chosen layouts)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import planner
+from repro.core.layout import LANES, SUBLANES
+from repro.core.planner import clear_plan_cache, plan_cache_info, plan_kernel
+
+
+def rnd(shape, dtype, seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), shape, jnp.float32)
+    return x.astype(dtype)
+
+
+class TestPlanCache:
+    def test_hit_miss_and_identity(self):
+        clear_plan_cache()
+        p1 = plan_kernel("stream.triad", (8191,), jnp.float32)
+        info = plan_cache_info()
+        assert info == {"hits": 0, "misses": 1, "size": 1}
+        p2 = plan_kernel("stream.triad", (8191,), jnp.float32)
+        assert p2 is p1  # same object: repeated calls reuse the cached plan
+        assert plan_cache_info()["hits"] == 1
+
+    def test_key_includes_shape_dtype_kernel_mesh(self):
+        clear_plan_cache()
+        base = plan_kernel("triad", (8191,), jnp.float32)
+        assert plan_kernel("triad", (8192,), jnp.float32) is not base
+        assert plan_kernel("triad", (8191,), jnp.bfloat16) is not base
+        assert plan_kernel("stream.triad", (8191,), jnp.float32) is not base
+        meshed = plan_kernel("rmsnorm", (64, 129), jnp.float32,
+                             mesh={"model": 4})
+        plain = plan_kernel("rmsnorm", (64, 129), jnp.float32)
+        assert meshed is not plain
+        assert plan_cache_info()["misses"] == 6
+
+    def test_unknown_family_raises(self):
+        with pytest.raises(KeyError):
+            plan_kernel("nope", (8,), jnp.float32)
+
+
+class TestPlanGeometry:
+    @pytest.mark.parametrize("n", [1, 7, 1000, 8191, 20000, 2 ** 22])
+    def test_1d_plans_are_tileable(self, n):
+        p = plan_kernel("stream.triad", (n,), jnp.float32)
+        rows, width = p.padded_shape
+        assert width % LANES == 0 and rows % SUBLANES == 0
+        assert rows * width >= n
+        assert rows % p.block_rows == 0 and width % p.block_cols == 0
+
+    def test_small_arrays_waste_less_than_fixed_width(self):
+        """The analytic width beats the old hard-coded 1024: n=1000 used to
+        pad to 8x1024 = 8192 elements (waste 7/8)."""
+        p = plan_kernel("stream.copy", (1000,), jnp.float32)
+        assert p.padded_elems <= 2048
+        assert p.waste < 0.5
+
+    def test_2d_plans_lane_and_mesh_aligned(self):
+        p = plan_kernel("rmsnorm", (100, 129), jnp.float32)
+        assert p.padded_shape == (104, 256)
+        meshed = plan_kernel("rmsnorm", (100, 129), jnp.float32,
+                             mesh={"model": 4})
+        assert meshed.width % (4 * LANES) == 0
+
+    def test_lbm_plans_tile_the_lattice(self):
+        soa = plan_kernel("lbm.soa", (19, 8, 8, 8), jnp.float32)
+        assert soa.padded_shape[0] == 19
+        assert soa.padded_shape[1] % soa.block_cols == 0
+        ivjk = plan_kernel("lbm.ivjk", (19, 8, 8, 8), jnp.float32)
+        sb, q, lanes = ivjk.padded_shape
+        assert (q, lanes) == (19, 128)
+        assert sb % ivjk.block_rows == 0
+
+    def test_awkward_row_counts_keep_big_blocks(self):
+        """Rows with no divisor near the budget pad up to a block multiple
+        instead of collapsing every DMA to 8 rows (4999 is prime)."""
+        p = plan_kernel("rmsnorm", (8 * 4999 - 3, 512), jnp.float32)
+        assert p.block_rows > SUBLANES
+        assert p.rows % p.block_rows == 0
+        assert p.waste < 0.05
+
+    def test_exactly_tileable_shapes_have_zero_row_pad(self):
+        """Power-of-two sizes keep zero waste: a nearby divisor block is
+        preferred over padding rows up."""
+        for fam, shape in [("triad", (2 ** 24,)), ("rmsnorm", (4096, 5760))]:
+            p = plan_kernel(fam, shape, jnp.float32)
+            assert p.waste == 0.0, (fam, p.padded_shape, p.block_shape)
+            assert p.rows % p.block_rows == 0
+
+    def test_mismatched_plan_rejected(self):
+        """A plan for one shape cannot silently drop another array's tail."""
+        from repro.kernels.stream import ops as sops
+
+        plan = plan_kernel("stream.copy", (1000,), jnp.float32)
+        with pytest.raises(ValueError, match="is for shape"):
+            sops.stream_copy(jnp.ones(2000), plan=plan)
+
+    def test_explain_reports_balance_and_waste(self):
+        txt = planner.explain("triad", (8191,), jnp.float32)
+        assert "predicted balance" in txt and "waste" in txt
+        assert "offsets" in txt
+
+
+class TestBalancePredictions:
+    def test_ge4_stream_signatures_reach_full_balance(self):
+        """The paper's 'no trial and error' claim under the default model:
+        skew + segment shift gives balance 1.0 for every >=4-stream family."""
+        for family in ("triad", "lbm.soa", "lbm.ivjk", "rmsnorm.gated"):
+            shape = (19, 8, 8, 8) if family.startswith("lbm.") else (
+                (64, 256) if family.startswith("rmsnorm") else (4096,))
+            p = plan_kernel(family, shape, jnp.float32)
+            assert p.signature.n_streams >= 4
+            assert p.predicted_balance == pytest.approx(1.0)
+
+    def test_planned_beats_naive(self):
+        for family in ("stream.copy", "triad", "jacobi"):
+            shape = (512, 512) if family == "jacobi" else (4096,)
+            p = plan_kernel(family, shape, jnp.float32)
+            assert p.naive_balance == pytest.approx(0.25)
+            assert p.predicted_balance > 3 * p.naive_balance
+
+
+class TestWrapperParity:
+    """Every kernel wrapper against its ref on non-tile-multiple shapes."""
+
+    @pytest.mark.parametrize("n", [1000, 8191])
+    def test_stream_triad(self, n):
+        from repro.kernels.stream import ops as sops
+        from repro.kernels.stream import ref as sref
+
+        b, c = rnd((n,), jnp.float32, 0), rnd((n,), jnp.float32, 1)
+        np.testing.assert_allclose(
+            np.asarray(sops.stream_triad(b, c, 3.0)),
+            np.asarray(sref.triad(b, c, 3.0)), rtol=1e-6, atol=1e-6)
+
+    @pytest.mark.parametrize("n", [1000, 8191])
+    def test_vector_triad(self, n):
+        from repro.kernels.triad import ops as tops
+        from repro.kernels.triad import ref as tref
+
+        b, c, d = (rnd((n,), jnp.float32, i) for i in range(3))
+        np.testing.assert_allclose(
+            np.asarray(tops.vector_triad(b, c, d)),
+            np.asarray(tref.triad(b, c, d)), rtol=1e-6, atol=1e-6)
+
+    def test_jacobi_ragged_cols(self):
+        from repro.kernels.jacobi import ops as jops
+        from repro.kernels.jacobi import ref as jref
+
+        g = rnd((67, 129), jnp.float32, 0)
+        np.testing.assert_allclose(np.asarray(jops.jacobi_step(g)),
+                                   np.asarray(jref.jacobi_step(g)),
+                                   rtol=1e-5, atol=1e-6)
+
+    def test_rmsnorm_ragged_cols(self):
+        from repro.kernels.rmsnorm import ops as rops
+        from repro.kernels.rmsnorm import ref as rref
+
+        x = rnd((3, 129), jnp.float32, 0)
+        s = rnd((129,), jnp.float32, 1) + 1.0
+        np.testing.assert_allclose(np.asarray(rops.rmsnorm(x, s)),
+                                   np.asarray(rref.rmsnorm(x, s)),
+                                   rtol=1e-5, atol=1e-6)
+
+    def test_xent_planner_tiles(self):
+        """No explicit bt/bv: the planner picks the online-softmax tile."""
+        from repro.kernels.xent import ops as xops
+        from repro.kernels.xent import ref as xref
+
+        t, v, lv = 129, 1111, 1000
+        logits = jax.random.normal(jax.random.PRNGKey(0), (t, v)) * 3
+        labels = jax.random.randint(jax.random.PRNGKey(1), (t,), 0, lv)
+        got = float(xops.xent_mean(logits, labels, logical_v=lv))
+        want = float(xref.xent(logits, labels, logical_v=lv).mean())
+        assert abs(got - want) < 1e-4
+
+    def test_lbm_planner_blocks(self):
+        from repro.kernels.lbm import ops as lops
+        from repro.kernels.lbm import ref as lref
+
+        f = lops.init_equilibrium(6, jnp.float32)  # S=216: ragged everywhere
+        for layout in ("soa", "ivjk"):
+            got = lops.lbm_step(f, 1.2, layout=layout)
+            np.testing.assert_allclose(np.asarray(got),
+                                       np.asarray(lref.lbm_step(f, 1.2)),
+                                       rtol=2e-5, atol=1e-7)
+
+    def test_segmented_dtype_preserved(self):
+        """to_flat keeps the segment dtype (bf16 roundtrip)."""
+        from repro.core.segmented import SegmentedArray
+
+        x = jnp.arange(10, dtype=jnp.bfloat16)
+        sa = SegmentedArray.from_flat(x, 3, align=128, shift=8)
+        assert sa.to_flat().dtype == jnp.bfloat16
+        empty = SegmentedArray([], [], [])
+        assert empty.to_flat().shape == (0,)

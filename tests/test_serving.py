@@ -4,6 +4,9 @@ import jax
 import numpy as np
 import pytest
 
+# Compile-bound serving sweep: full tier-1 only.
+pytestmark = pytest.mark.slow
+
 from repro.configs import get_config, reduce_for_smoke
 from repro.models import build_model
 from repro.models.params import init_params

@@ -2,6 +2,10 @@
 (train loop + data + optimizer + schedule together)."""
 import jax
 import numpy as np
+import pytest
+
+# Multi-step train loops (compile + many steps): full tier-1 only.
+pytestmark = pytest.mark.slow
 
 from repro.data.pipeline import DataConfig, make_batch
 from repro.models import build_model
