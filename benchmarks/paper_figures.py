@@ -17,6 +17,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import api
 from repro.core.aliasing import InterleavedMemoryModel, Stream
 from repro.core.autotune import StreamSignature, plan_streams
 from repro.core.segmented import SegmentedArray
@@ -51,7 +52,7 @@ def fig2_stream_offset() -> list[tuple[str, float, str]]:
     n = 2 ** 20
     a = jnp.zeros(n)
     b = jnp.ones(n)
-    us = _time(lambda x, y: sops.stream_triad(x, y, 3.0), a, b)
+    us = _time(lambda x, y: api.launch("stream.triad", x, y, s=3.0), a, b)
     rows.append(("fig2.cpu.triad_1M", us,
                  f"{sops.bytes_moved('triad', n) / (us * 1e-6) / 1e9:.2f}GB/s"))
     return rows
@@ -72,7 +73,7 @@ def fig4_vector_triad() -> list[tuple[str, float, str]]:
                  "/".join(map(str, plan.offsets_bytes))))
     n = 2 ** 20
     b, c, d = (jnp.full(n, float(i)) for i in range(3))
-    us = _time(tops.vector_triad, b, c, d)
+    us = _time(lambda x, y, z: api.launch("triad", x, y, z), b, c, d)
     rows.append(("fig4.cpu.triad_aligned_1M", us,
                  f"{tops.triad_bytes(n, 4, rfo=False) / (us * 1e-6) / 1e9:.2f}GB/s"))
     us2 = _time(lambda x, y, z: tops.vector_triad_phased(
@@ -86,7 +87,7 @@ def fig5_segmented_overhead() -> list[tuple[str, float, str]]:
     rows = []
     for n in (10_000, 100_000, 1_000_000):
         b, c, d = (jnp.full(n, float(i)) for i in range(3))
-        us_plain = _time(tops.vector_triad, b, c, d)
+        us_plain = _time(lambda x, y, z: api.launch("triad", x, y, z), b, c, d)
         segs = [SegmentedArray.from_flat(v, 8, align=128, shift=16)
                 for v in (jnp.zeros(n), b, c, d)]
         fn = jax.jit(tops.vector_triad_segmented)

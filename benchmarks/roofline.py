@@ -89,17 +89,18 @@ def planner_rows() -> list[tuple[str, float, str]]:
     """The planner's analytic predictions per kernel family: channel balance
     under the planned skews vs the naive layout, and the padding waste the
     plan pays for whole-tile DMAs.  No dry-run needed -- this is the 'no
-    trial and error' table."""
-    from repro.core import planner
+    trial and error' table.  Plans resolve through ``repro.api`` so the rows
+    reflect the ambient PlanContext (mesh, dtype sublane policy)."""
+    from repro import api
 
     out = []
     for kernel, shape, dtype in PLAN_CASES:
-        p = planner.plan_kernel(kernel, shape, dtype)
+        p = api.plan_for(kernel, shape, dtype)
         out.append((
             f"plan.{kernel}",
             0.0,
             f"balance={p.predicted_balance:.2f};naive={p.naive_balance:.2f};"
-            f"waste={p.waste:.4f};"
+            f"waste={p.waste:.4f};sublanes={p.sublanes};"
             f"block={'x'.join(str(b) for b in p.block_shape)}",
         ))
     return out
@@ -137,7 +138,7 @@ def rows(path: str = "results/dryrun.json") -> list[tuple[str, float, str]]:
 
 
 if __name__ == "__main__":
-    from repro.core import planner
+    from repro import api
 
     for kernel, shape, dtype in PLAN_CASES:
-        print(planner.explain(kernel, shape, dtype))
+        print(api.explain(kernel, shape, dtype))

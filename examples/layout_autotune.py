@@ -5,14 +5,16 @@
   3. Jacobi parameters (SS2.3)     -- align=512, shift=128, static-1,
   4. LBM layout choice (Fig. 7)    -- ivjk auto-skew vs soa, N%64 hazard,
   5. MoE expert placement          -- the same skew rule at pod scale,
-  6. kernel plans (planner)        -- the closed loop: signature -> padded
-                                      shape, VMEM block, skews, predicted
-                                      balance, waste.
+  6. kernel plans (repro.api)      -- the closed loop: registry + ambient
+                                      PlanContext -> padded shape, VMEM
+                                      block, skews, predicted balance,
+                                      waste; one policy for every kernel.
 
 Run:  PYTHONPATH=src python examples/layout_autotune.py
 """
 import numpy as np
 
+from repro import api
 from repro.core import planner
 from repro.core.aliasing import InterleavedMemoryModel, exhaustive_best_skews
 from repro.core.autotune import StreamSignature, plan_streams
@@ -57,6 +59,7 @@ def main() -> None:
           f"skewed={skewed:.2f}  ({naive / skewed:.1f}x smoother)")
 
     print("== 6. kernel plans: analysis -> execution, no trial and error ==")
+    print(f"  registered kernels: {', '.join(api.list_kernels())}")
     for kernel, shape, dtype in [
         ("stream.triad", (2 ** 24,), "float32"),
         ("triad", (8191,), "float32"),
@@ -65,7 +68,13 @@ def main() -> None:
         ("rmsnorm", (4096, 5760), "bfloat16"),
         ("xent", (4096, 122753), "float32"),
     ]:
-        print(planner.explain(kernel, shape, dtype))
+        print(api.explain(kernel, shape, dtype))
+    # the same shapes under a 16-way tensor-parallel mesh: one ambient
+    # context re-plans every family with shard-aligned minor dims.
+    with api.plan_context(mesh={"model": 16}):
+        p = api.plan_for("rmsnorm", (4096, 5760), "bfloat16")
+        print(f"  under mesh model=16: rmsnorm minor dim "
+              f"{p.width} (= {p.width // 16} per shard, lane-aligned)")
     info = planner.plan_cache_info()
     print(f"  plan cache: {info['size']} plans, "
           f"{info['hits']} hits / {info['misses']} misses")

@@ -9,6 +9,7 @@ Run:  PYTHONPATH=src python examples/quickstart.py
 """
 import jax.numpy as jnp
 
+from repro import api
 from repro.core.aliasing import InterleavedMemoryModel, Stream
 from repro.core.autotune import StreamSignature, plan_streams
 from repro.core.layout import LayoutPolicy
@@ -35,6 +36,12 @@ def main() -> None:
     b = jnp.linspace(0, 1, n)
     c = jnp.linspace(1, 2, n)
     d = jnp.linspace(2, 3, n)
+    # the unified launch path: the registry resolves the analytic plan for
+    # this (shape, dtype) and runs the Pallas body -- one call, no wrapper.
+    out = api.launch("triad", b, c, d)
+    err = float(jnp.max(jnp.abs(out - triad_ref.triad(b, c, d))))
+    print(f"api.launch('triad', ...) max err vs oracle: {err:.1e}")
+    print(api.explain("triad", (n,), b.dtype))
     phases = tuple(o // 8 for o in plan.offsets_bytes[1:])
     out = triad_ops.vector_triad_phased(b, c, d, phases=phases)
     err = float(jnp.max(jnp.abs(out - triad_ref.triad(b, c, d))))

@@ -1,0 +1,67 @@
+"""API smoke stage for tier-1: the registry surface must be complete.
+
+Imports every registered kernel family, fails on unregistered or shadowed
+names (registry vs ``core.planner.FAMILIES`` drift), and renders
+``explain()`` for one shape per family -- if any family cannot plan, this
+exits non-zero before the test suite even starts.
+
+Run:  PYTHONPATH=src python scripts/api_smoke.py
+"""
+from __future__ import annotations
+
+import sys
+
+EXPECTED = {
+    "stream.copy", "stream.scale", "stream.add", "stream.triad",
+    "triad", "jacobi", "lbm.soa", "lbm.ivjk",
+    "rmsnorm", "rmsnorm.gated", "xent",
+}
+
+# one representative shape per family for the explain() pass
+FAMILY_SMOKE = [
+    ("stream.triad", (8191,), "float32"),
+    ("triad", (2 ** 20,), "float32"),
+    ("jacobi", (998, 1000), "float32"),
+    ("lbm.ivjk", (19, 24, 24, 24), "float32"),
+    ("rmsnorm", (4096, 5760), "bfloat16"),
+    ("xent", (4096, 122753), "float32"),
+]
+
+
+def main() -> int:
+    from repro import api
+    from repro.core import planner
+
+    names = set(api.list_kernels())  # imports every family module
+    missing = EXPECTED - names
+    if missing:
+        print(f"FAIL: unregistered kernels: {sorted(missing)}")
+        return 1
+    shadowed = []
+    for name in sorted(names):
+        entry = api.get_kernel(name)
+        fam = planner.FAMILIES.get(name)
+        if fam is None:
+            shadowed.append(f"{name}: registered but absent from "
+                            f"planner.FAMILIES")
+        elif (fam.n_read, fam.n_write) != (entry.signature.n_read,
+                                           entry.signature.n_write):
+            shadowed.append(
+                f"{name}: planner says {fam.n_read}R+{fam.n_write}W, "
+                f"registry says {entry.signature.n_read}R+"
+                f"{entry.signature.n_write}W"
+            )
+    if shadowed:
+        print("FAIL: shadowed kernel declarations:")
+        for s in shadowed:
+            print(f"  {s}")
+        return 1
+    for name, shape, dtype in FAMILY_SMOKE:
+        print(api.explain(name, shape, dtype))
+    print(f"api-smoke OK: {len(names)} kernels across "
+          f"{len({n.split('.')[0] for n in names})} families")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -5,4 +5,9 @@
 #   PYTHONPATH=src python -m pytest -q
 set -euo pipefail
 cd "$(dirname "$0")/.."
-PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" exec python -m pytest -q -m "not slow" "$@"
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+# Stage 1: API smoke -- every kernel family registered, plannable,
+# explainable (fails fast on unregistered/shadowed names).
+python scripts/api_smoke.py
+# Stage 2: fast test matrix.
+exec python -m pytest -q -m "not slow" "$@"

@@ -1,0 +1,37 @@
+"""Unified kernel-launch API: registry + PlanContext + one launch path.
+
+    from repro import api
+
+    with api.plan_context(mesh=mesh):
+        y = api.launch("rmsnorm", x, scale, eps=1e-6)
+        print(api.explain("xent", (4096, 122753), "float32"))
+
+Every kernel family declares itself with ``@register_kernel`` (streams,
+reference oracle, Pallas body); ``launch`` resolves the analytic plan under
+the ambient ``PlanContext`` and dispatches.  See docs/API.md for the
+migration table from the old per-family wrappers.
+"""
+from repro.api.context import (
+    PlanContext,
+    current_context,
+    get_default_context,
+    plan_context,
+    reset_default_context,
+    set_default_context,
+)
+from repro.api.dispatch import explain, launch, plan_for, ref
+from repro.api.registry import (
+    FAMILY_MODULES,
+    KernelEntry,
+    get_kernel,
+    list_kernels,
+    register_kernel,
+)
+
+__all__ = [
+    "PlanContext", "plan_context", "current_context",
+    "set_default_context", "get_default_context", "reset_default_context",
+    "launch", "plan_for", "explain", "ref",
+    "register_kernel", "get_kernel", "list_kernels",
+    "KernelEntry", "FAMILY_MODULES",
+]

@@ -1,0 +1,155 @@
+"""PlanContext: the ambient layout policy every kernel launch plans under.
+
+The paper's lesson (SS2.3) is that layout parameters must be *global*: the
+same address->resource analysis has to govern every loop kernel, or the
+erratic per-kernel numbers of Fig. 2/4 come back.  After PR 1 the planner
+(``core/planner``) was authoritative but had no way to learn the mesh, the
+dtype sublane policy, or the VMEM budget at the places kernels are actually
+launched -- every wrapper called ``plan_kernel`` with defaults, and threading
+a ``jax.sharding.Mesh`` through serving/training would have meant signature
+churn at every layer.
+
+``PlanContext`` fixes that as an *ambient* value:
+
+    with plan_context(mesh=mesh):
+        trainer.train(...)        # every kernel launched inside plans
+                                  # against ``mesh`` automatically
+
+Contexts nest; inner contexts inherit every field they do not override from
+the enclosing one (``plan_overrides`` merge, inner wins).  A process-wide
+default (``set_default_context``) serves launchers that configure the mesh
+once at startup.  The context is thread-local, so concurrent serving threads
+can plan against different meshes.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Any, Mapping
+
+import numpy as np
+
+from repro.core.layout import VMEM_BYTES
+from repro.core.planner import KernelPlan, sublanes_for_dtype
+
+_UNSET = object()
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanContext:
+    """Everything the planner needs beyond (kernel, shape, dtype).
+
+    mesh:
+        a ``jax.sharding.Mesh``, a ``{axis: size}`` mapping, or ``(axis,
+        size)`` pairs; widens minor-dim padding so model-axis shards stay
+        lane-aligned.  ``None`` plans for a single device.
+    sublane_policy:
+        per-dtype sublane-tile override, keyed by numpy dtype name (e.g.
+        ``{"bfloat16": 8}`` to force fp32-style tiles).  Unlisted dtypes use
+        the hardware-native tile: 8 rows for 4-byte, 16 for 2-byte, 32 for
+        fp8/int8.
+    vmem_budget:
+        per-core VMEM bytes the block chooser may assume (defaults to the
+        v5e budget).
+    model:
+        the conflict model (``InterleavedMemoryModel``) scoring skews;
+        ``None`` uses the planner default.
+    plan_overrides:
+        ``{kernel_name: KernelPlan}`` escape hatch -- a launch of that kernel
+        at the pinned plan's exact logical shape and dtype uses it instead
+        of consulting the planner; launches at any other shape fall through
+        to the planner (one kernel serves many shapes in a real run).
+    """
+
+    mesh: Any = None
+    sublane_policy: Mapping[str, int] = dataclasses.field(default_factory=dict)
+    vmem_budget: int = VMEM_BYTES
+    model: Any = None
+    plan_overrides: Mapping[str, KernelPlan] = dataclasses.field(
+        default_factory=dict
+    )
+
+    def sublanes_for(self, dtype) -> int:
+        """Sublane tile height for ``dtype`` under this context's policy."""
+        dt = np.dtype(dtype)
+        override = self.sublane_policy.get(dt.name)
+        return sublanes_for_dtype(dt) if override is None else int(override)
+
+    def evolve(self, **changes) -> "PlanContext":
+        """Derived context: fields passed as ``_UNSET`` keep this context's
+        value; ``plan_overrides`` merge with the new mapping winning, and an
+        explicit ``plan_overrides=None`` clears every inherited pin (the
+        only way an inner scope can escape an outer override)."""
+        unknown = set(changes) - {f.name for f in dataclasses.fields(self)}
+        if unknown:
+            raise TypeError(f"unknown PlanContext fields: {sorted(unknown)}")
+        kw = {}
+        for f in dataclasses.fields(self):
+            v = changes.get(f.name, _UNSET)
+            if v is _UNSET:
+                kw[f.name] = getattr(self, f.name)
+            elif f.name == "plan_overrides":
+                kw[f.name] = {} if v is None else {**self.plan_overrides,
+                                                   **dict(v)}
+            elif f.name == "sublane_policy":
+                kw[f.name] = dict(v or {})
+            else:
+                kw[f.name] = v
+        return PlanContext(**kw)
+
+
+_DEFAULT_LOCK = threading.Lock()
+_default = PlanContext()
+_tls = threading.local()
+
+
+def _stack() -> list[PlanContext]:
+    st = getattr(_tls, "stack", None)
+    if st is None:
+        st = _tls.stack = []
+    return st
+
+
+def current_context() -> PlanContext:
+    """The innermost active ``plan_context``, else the process default."""
+    st = _stack()
+    return st[-1] if st else _default
+
+
+def set_default_context(ctx: PlanContext) -> PlanContext:
+    """Install the process-wide default context (returned for chaining).
+    Launchers call this once at startup so every thread plans against the
+    production mesh without per-call plumbing."""
+    global _default
+    if not isinstance(ctx, PlanContext):
+        raise TypeError(f"expected PlanContext, got {type(ctx).__name__}")
+    with _DEFAULT_LOCK:
+        _default = ctx
+    return ctx
+
+
+def get_default_context() -> PlanContext:
+    return _default
+
+
+def reset_default_context() -> None:
+    """Restore the built-in default (tests)."""
+    set_default_context(PlanContext())
+
+
+@contextlib.contextmanager
+def plan_context(mesh=_UNSET, *, sublane_policy=_UNSET, vmem_budget=_UNSET,
+                 model=_UNSET, plan_overrides=_UNSET):
+    """Enter a derived ``PlanContext``; unspecified fields inherit from the
+    enclosing context (or the process default at the outermost level)."""
+    base = current_context()
+    ctx = base.evolve(mesh=mesh, sublane_policy=sublane_policy,
+                      vmem_budget=vmem_budget, model=model,
+                      plan_overrides=plan_overrides)
+    st = _stack()
+    st.append(ctx)
+    try:
+        yield ctx
+    finally:
+        st.pop()

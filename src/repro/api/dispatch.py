@@ -1,0 +1,99 @@
+"""The unified kernel-launch path: ``launch(kernel, *arrays, **scalars)``.
+
+One entry point replaces six hand-rolled wrappers:
+
+    from repro import api
+    y = api.launch("stream.triad", b, c, s=3.0)
+
+``launch`` resolves the registered entry (lazily importing its family),
+derives the logical planning shape from the arrays, asks the analytic
+planner for the memoized ``KernelPlan`` under the ambient ``PlanContext``
+(mesh, dtype->sublane policy, VMEM budget, overrides), validates that the
+plan actually agrees with the arrays, and hands both to the registered
+Pallas body.  Every kernel family therefore plans through exactly the same
+policy -- the paper's requirement that one layout analysis governs all loop
+kernels -- and a mesh set once via ``plan_context(mesh=...)`` reaches the
+planner from any call site without signature churn.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.api import context as context_lib
+from repro.api import registry as registry_lib
+from repro.core.planner import KernelPlan, plan_kernel
+
+__all__ = ["launch", "plan_for", "explain", "ref"]
+
+
+def plan_for(kernel: str, shape, dtype, *, ctx=None) -> KernelPlan:
+    """The plan ``launch`` would use for ``kernel`` on (shape, dtype) under
+    the ambient (or given) ``PlanContext``.  Requires the kernel to be
+    registered -- unknown names fail here, not at launch time."""
+    entry = registry_lib.resolve(kernel)
+    ctx = ctx or context_lib.current_context()
+    override = ctx.plan_overrides.get(entry.name)
+    if override is not None and _matches(entry, override, shape, dtype):
+        # A pinned plan applies only to the exact case it was built for;
+        # the same kernel launched at any other shape/dtype falls through
+        # to the planner (real runs launch one kernel at many shapes).
+        return override
+    return plan_kernel(
+        entry.name, shape, dtype,
+        mesh=ctx.mesh,
+        model=ctx.model,
+        sublanes=ctx.sublanes_for(dtype),
+        vmem_budget=ctx.vmem_budget,
+    )
+
+
+def _matches(entry, plan: KernelPlan, shape, dtype) -> bool:
+    return (plan.kernel == entry.name
+            and tuple(plan.logical_shape) == tuple(int(s) for s in shape)
+            and plan.dtype == np.dtype(dtype).name)
+
+
+def _validate(entry, plan: KernelPlan, shape, dtype) -> None:
+    """Plan <-> array agreement: a stale or hand-built plan must never
+    silently drop tail elements or run a kernel at the wrong dtype."""
+    if plan.kernel != entry.name:
+        raise ValueError(
+            f"plan is for kernel {plan.kernel!r}, launched {entry.name!r}"
+        )
+    if tuple(plan.logical_shape) != tuple(int(s) for s in shape):
+        raise ValueError(
+            f"plan {plan.kernel} is for shape {plan.logical_shape}, "
+            f"got arrays of logical shape {tuple(shape)}"
+        )
+    if plan.dtype != np.dtype(dtype).name:
+        raise ValueError(
+            f"plan {plan.kernel} is for dtype {plan.dtype}, "
+            f"got {np.dtype(dtype).name}"
+        )
+
+
+def launch(kernel: str, *arrays, plan: KernelPlan | None = None, **scalars):
+    """Run a registered kernel on ``arrays`` under the ambient PlanContext.
+
+    ``plan`` pins an explicit ``KernelPlan`` (still validated); otherwise
+    the context's ``plan_overrides`` and then the memoized planner decide.
+    Scalars (including optional array-valued options like LBM's ``mask``)
+    pass through as keywords to the registered body.
+    """
+    entry = registry_lib.resolve(kernel)
+    shape, dtype = entry.plan_args(*arrays, **scalars)
+    if plan is None:
+        plan = plan_for(kernel, shape, dtype)
+    _validate(entry, plan, shape, dtype)
+    return entry.body(plan, *arrays, **scalars)
+
+
+def ref(kernel: str, *arrays, **scalars):
+    """The registered pure-jnp oracle, same calling convention as launch."""
+    return registry_lib.resolve(kernel).ref(*arrays, **scalars)
+
+
+def explain(kernel: str, shape, dtype) -> str:
+    """Human-readable plan report for any registered kernel under the
+    ambient context (the dry-run analogue of the paper's parameter table)."""
+    return plan_for(kernel, shape, dtype).explain()

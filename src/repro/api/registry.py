@@ -1,0 +1,139 @@
+"""Declarative kernel registry: one place where every Pallas family lives.
+
+Each kernel family registers itself with
+
+    @register_kernel("stream.triad",
+                     signature=StreamSignature(n_read=2, n_write=1),
+                     ref=sref.triad, plan_args=_plan_args_1d)
+    def _stream_triad(plan, b, c, *, s): ...
+
+declaring, in one spot, everything the unified launch path needs:
+
+  * ``signature`` -- the paper's "data access properties" row (how many
+    read/write streams the kernel drives against HBM).  Registration pushes
+    it into ``core.planner.FAMILIES`` via ``register_family``, so the
+    planner's analysis and the executable kernel can never drift; a name
+    registered twice with a different signature or body raises (shadowed
+    name) instead of silently replacing the kernel.
+  * ``ref`` -- the pure-jnp oracle with the same calling convention as
+    ``launch``, so parity tests and fallbacks are mechanical.
+  * ``plan_args`` -- how to derive the *logical planning shape* from the
+    call's arrays (1-D streams plan on ``a.shape``; rmsnorm flattens leading
+    dims; jacobi plans its interior rows; LBM plans the whole lattice).
+  * the decorated function -- the Pallas launch body, taking the resolved
+    ``KernelPlan`` first: ``body(plan, *arrays, **scalars)``.
+
+Entries are resolved lazily: ``resolve("rmsnorm")`` imports
+``repro.kernels.rmsnorm.ops`` on first use, so ``repro.api`` never has an
+import cycle with the kernels package and ``launch`` works without the
+caller pre-importing anything.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Callable
+
+from repro.core import planner as planner_lib
+from repro.core.autotune import StreamSignature
+
+# family prefix of a registered name -> module whose import registers it
+FAMILY_MODULES: dict[str, str] = {
+    "stream": "repro.kernels.stream.ops",
+    "triad": "repro.kernels.triad.ops",
+    "jacobi": "repro.kernels.jacobi.ops",
+    "lbm": "repro.kernels.lbm.ops",
+    "rmsnorm": "repro.kernels.rmsnorm.ops",
+    "xent": "repro.kernels.xent.ops",
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelEntry:
+    """One registered kernel: analysis + oracle + Pallas body."""
+
+    name: str
+    signature: StreamSignature
+    ref: Callable
+    plan_args: Callable      # (*arrays, **scalars) -> (shape, dtype)
+    body: Callable           # (plan, *arrays, **scalars) -> result
+    doc: str = ""
+
+
+_REGISTRY: dict[str, KernelEntry] = {}
+
+
+def register_kernel(
+    name: str,
+    *,
+    signature: StreamSignature,
+    ref: Callable,
+    plan_args: Callable,
+    vmem_buffers: int | None = None,
+    col_tiled: bool = False,
+    doc: str = "",
+):
+    """Decorator: declare a kernel family's streams and launch body.
+
+    ``vmem_buffers``/``col_tiled`` feed the planner's block-geometry tables
+    (see ``core.planner.register_family``).
+    """
+
+    def deco(body: Callable) -> Callable:
+        prev = _REGISTRY.get(name)
+        # Same module + qualname = an idempotent re-import; anything else
+        # (including a same-named function from another module) is a shadow.
+        if prev is not None and (
+                prev.body.__module__ != body.__module__
+                or prev.body.__qualname__ != body.__qualname__):
+            raise ValueError(
+                f"kernel {name!r} already registered by "
+                f"{prev.body.__module__}.{prev.body.__qualname__}; "
+                f"refusing shadow registration"
+            )
+        planner_lib.register_family(name, signature,
+                                    vmem_buffers=vmem_buffers,
+                                    col_tiled=col_tiled)
+        _REGISTRY[name] = KernelEntry(
+            name=name,
+            signature=signature,
+            ref=ref,
+            plan_args=plan_args,
+            body=body,
+            doc=doc or (body.__doc__ or "").strip(),
+        )
+        return body
+
+    return deco
+
+
+def resolve(name: str) -> KernelEntry:
+    """Entry for ``name``, importing its family module on first use."""
+    entry = _REGISTRY.get(name)
+    if entry is not None:
+        return entry
+    module = FAMILY_MODULES.get(name.split(".")[0])
+    if module is not None:
+        importlib.import_module(module)
+        entry = _REGISTRY.get(name)
+        if entry is not None:
+            return entry
+    raise KeyError(
+        f"no kernel registered as {name!r}; known: {sorted(_REGISTRY)}"
+        f" (families: {sorted(FAMILY_MODULES)})"
+    )
+
+
+def get_kernel(name: str) -> KernelEntry:
+    """Public alias of :func:`resolve`."""
+    return resolve(name)
+
+
+def list_kernels(*, import_all: bool = True) -> list[str]:
+    """Sorted names of every registered kernel.  With ``import_all`` (the
+    default) every family module is imported first, so the listing is the
+    complete surface, not just what happens to be loaded."""
+    if import_all:
+        for module in FAMILY_MODULES.values():
+            importlib.import_module(module)
+    return sorted(_REGISTRY)

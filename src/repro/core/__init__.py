@@ -8,7 +8,10 @@ from repro.core.planner import (
     clear_plan_cache,
     explain,
     plan_cache_info,
+    plan_cache_keys,
     plan_kernel,
+    register_family,
+    sublanes_for_dtype,
 )
 from repro.core.segmented import SegmentedArray, seg_map, seg_triad
 
@@ -16,7 +19,7 @@ __all__ = [
     "InterleavedMemoryModel", "Stream", "analytic_skews",
     "LayoutPlan", "StreamSignature", "plan_streams",
     "LANES", "SUBLANES", "LayoutPolicy", "PaddedDim", "round_up",
-    "KernelPlan", "plan_kernel", "plan_cache_info", "clear_plan_cache",
-    "explain",
+    "KernelPlan", "plan_kernel", "plan_cache_info", "plan_cache_keys",
+    "clear_plan_cache", "explain", "register_family", "sublanes_for_dtype",
     "SegmentedArray", "seg_map", "seg_triad",
 ]

@@ -163,19 +163,24 @@ def choose_block_shape(
     vmem_budget: int = VMEM_BYTES,
     max_block_rows: int = 1024,
     max_block_cols: int = 4096,
+    sublane_tile: int = SUBLANES,
 ) -> tuple[int, int]:
     """Pick an (rows, cols) VMEM block for a streaming 2-D kernel.
 
     The paper's rule "align each segment to the controller period" becomes:
     the block minor dim is a multiple of 128 lanes (full lines per DMA), the
-    block major dim a multiple of 8 sublanes, and ``n_buffers`` blocks
-    (double-buffered in/out streams) must fit the VMEM budget.  Kernels that
-    stream full-width row blocks pass ``max_block_cols=cols`` so the row
-    budget is charged against the columns they actually keep resident.
+    block major dim a multiple of ``sublane_tile`` sublanes (8 for fp32, 16
+    for 2-byte dtypes, 32 for fp8), and ``n_buffers`` blocks (double-buffered
+    in/out streams) must fit the VMEM budget.  Kernels that stream full-width
+    row blocks pass ``max_block_cols=cols`` so the row budget is charged
+    against the columns they actually keep resident.
     """
     bcols = round_up(min(cols, max_block_cols), LANES)
     # rows: as many sublane-multiples as fit the budget
     per_row = bcols * bytes_per_el * n_buffers
-    brows = max(SUBLANES, round_down(min(vmem_budget // max(per_row, 1), max_block_rows, rows), SUBLANES))
-    brows = max(brows, min(rows, SUBLANES))
+    brows = max(sublane_tile, round_down(
+        min(vmem_budget // max(per_row, 1), max_block_rows, rows),
+        sublane_tile,
+    ))
+    brows = max(brows, min(rows, sublane_tile))
     return int(brows), int(bcols)

@@ -52,6 +52,19 @@ from repro.core.layout import (
 # that n_streams blocks of any planned kernel fit VMEM comfortably.
 MAX_WIDTH = 4096
 
+# Sublane tile height per element size: fp32 packs (8, 128) VREG tiles,
+# 2-byte dtypes (bf16/fp16) pack (16, 128), fp8/int8 pack (32, 128).  Using
+# the dtype's native tile keeps the physical footprint equal to what XLA
+# would materialize anyway -- and at 2 (or 1) bytes per element the padding
+# the plan *pays* shrinks accordingly.
+SUBLANES_BY_ITEMSIZE: dict[int, int] = {1: 32, 2: 16}
+
+
+def sublanes_for_dtype(dtype) -> int:
+    """Native sublane tile height for ``dtype`` (8 fp32 / 16 bf16 / 32 fp8)."""
+    return SUBLANES_BY_ITEMSIZE.get(np.dtype(dtype).itemsize, SUBLANES)
+
+
 # The paper's per-kernel "data access properties" table: how many read and
 # write streams each kernel family drives against HBM.  Element size is
 # rebound to the actual dtype at planning time.
@@ -81,7 +94,54 @@ VMEM_BUFFERS: dict[str, int] = {"jacobi": 4}
 # Families whose kernels tile the minor dim too (blocked columns).  All
 # other 2-D kernels stream full-width row blocks, so their row budget must
 # be charged against the whole padded width.
-COL_TILED = frozenset({"xent"})
+COL_TILED = {"xent"}
+
+
+def register_family(
+    name: str,
+    signature: StreamSignature,
+    *,
+    vmem_buffers: int | None = None,
+    col_tiled: bool = False,
+) -> None:
+    """Declare (or re-assert) a kernel family's stream signature.
+
+    The registry (``repro.api.registry``) calls this when a kernel registers,
+    so the planner's table and the registered kernels can never drift: a
+    second declaration with a *different* signature or VMEM-buffer count is
+    a shadowed name and raises instead of silently replacing the analysis.
+    A declaration that introduces new block geometry (first ``vmem_buffers``
+    or newly ``col_tiled``) drops the family's cached plans, so earlier
+    plans made under the defaults cannot linger alongside new ones.
+    """
+    cur = FAMILIES.get(name)
+    if cur is not None and (cur.n_read, cur.n_write) != (
+            signature.n_read, signature.n_write):
+        raise ValueError(
+            f"kernel family {name!r} already declared with "
+            f"{cur.n_read}R+{cur.n_write}W; refusing shadow declaration "
+            f"{signature.n_read}R+{signature.n_write}W"
+        )
+    geometry_changed = False
+    if vmem_buffers is not None:
+        prev = VMEM_BUFFERS.get(name)
+        if prev is not None and prev != vmem_buffers:
+            raise ValueError(
+                f"kernel family {name!r} already declared with "
+                f"{prev} VMEM buffers; refusing shadow declaration "
+                f"{vmem_buffers}"
+            )
+        geometry_changed = prev is None
+    FAMILIES[name] = signature
+    if vmem_buffers is not None:
+        VMEM_BUFFERS[name] = vmem_buffers
+    if col_tiled and name not in COL_TILED:
+        COL_TILED.add(name)
+        geometry_changed = True
+    if geometry_changed:
+        with _LOCK:
+            for key in [k for k in _CACHE if k[0] == name]:
+                del _CACHE[key]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -102,6 +162,7 @@ class KernelPlan:
     layout: LayoutPlan
     naive_balance: float
     mesh: tuple[tuple[str, int], ...] = ()
+    sublanes: int = SUBLANES
 
     # ---- geometry --------------------------------------------------------
     @property
@@ -146,6 +207,22 @@ class KernelPlan:
         return (p - self.logical_elems) / p if p else 0.0
 
     @property
+    def elem_bytes(self) -> int:
+        return np.dtype(self.dtype).itemsize
+
+    @property
+    def padded_bytes(self) -> int:
+        """Physical HBM footprint of one planned stream."""
+        return self.padded_elems * self.elem_bytes
+
+    @property
+    def waste_bytes(self) -> int:
+        """Padding overhead in bytes -- the hardware-meaningful waste metric
+        (a bf16 plan with wider sublane tiles can pad more *elements* than
+        the fp32 plan of the same logical shape yet cost fewer bytes)."""
+        return (self.padded_elems - self.logical_elems) * self.elem_bytes
+
+    @property
     def predicted_balance(self) -> float:
         return self.layout.predicted_balance
 
@@ -156,7 +233,8 @@ class KernelPlan:
         block = "x".join(str(b) for b in self.block_shape)
         return (
             f"plan[{self.kernel}] logical={self.logical_shape} {self.dtype}"
-            f" -> physical {self.padded_shape}, block {block}, grid {grid}\n"
+            f" -> physical {self.padded_shape}, block {block}, grid {grid},"
+            f" sublanes {self.sublanes}\n"
             f"  streams: {sig.n_read}R+{sig.n_write}W x {sig.elem_bytes}B"
             f"  align={self.layout.align_bytes}B"
             f" offsets={self.layout.offsets_bytes}B"
@@ -195,11 +273,17 @@ def plan_kernel(
     *,
     mesh=None,
     model: InterleavedMemoryModel | None = None,
+    sublanes: int | None = None,
+    vmem_budget: int | None = None,
 ) -> KernelPlan:
     """Memoized analytic plan for ``kernel`` on a logical ``shape``/``dtype``.
 
     ``mesh`` (a jax Mesh, a mapping, or ``(axis, size)`` pairs) widens the
     minor-dim padding so every model-axis shard stays lane-aligned.
+    ``sublanes`` overrides the dtype-derived sublane tile (8 fp32 / 16 bf16 /
+    32 fp8); ``vmem_budget`` caps the per-core VMEM bytes the block chooser
+    may assume.  Both default from the dtype / hardware and are normally
+    supplied by the ambient ``repro.api.PlanContext``.
     """
     if kernel not in FAMILIES:
         raise KeyError(
@@ -208,14 +292,21 @@ def plan_kernel(
     dt = np.dtype(dtype)
     mesh_key = _mesh_key(mesh)
     model = model or _DEFAULT_MODEL
-    key = (kernel, tuple(int(s) for s in shape), dt.name, mesh_key, model)
+    sub = sublanes_for_dtype(dt) if sublanes is None else int(sublanes)
+    budget = VMEM_BYTES if vmem_budget is None else int(vmem_budget)
+    if sub <= 0:
+        raise ValueError(f"sublanes must be positive, got {sublanes}")
+    if budget <= 0:
+        raise ValueError(f"vmem_budget must be positive, got {vmem_budget}")
+    key = (kernel, tuple(int(s) for s in shape), dt.name, mesh_key, model,
+           sub, budget)
     with _LOCK:
         plan = _CACHE.get(key)
         if plan is not None:
             _STATS["hits"] += 1
             return plan
         _STATS["misses"] += 1
-        plan = _plan_uncached(kernel, key[1], dt, mesh_key, model)
+        plan = _plan_uncached(kernel, key[1], dt, mesh_key, model, sub, budget)
         _CACHE[key] = plan
         return plan
 
@@ -226,6 +317,14 @@ def plan_cache_info() -> dict[str, int]:
                 "size": len(_CACHE)}
 
 
+def plan_cache_keys() -> list[tuple]:
+    """Snapshot of the memo keys ``(kernel, shape, dtype, mesh, model,
+    sublanes, vmem_budget)`` -- lets tests and audits assert *which* mesh and
+    sublane policy actually reached the planner at a call site."""
+    with _LOCK:
+        return list(_CACHE)
+
+
 def clear_plan_cache() -> None:
     with _LOCK:
         _CACHE.clear()
@@ -233,9 +332,12 @@ def clear_plan_cache() -> None:
 
 
 def explain(kernel: str, shape, dtype, *, mesh=None,
-            model: InterleavedMemoryModel | None = None) -> str:
+            model: InterleavedMemoryModel | None = None,
+            sublanes: int | None = None,
+            vmem_budget: int | None = None) -> str:
     """Convenience: plan and render the report in one call."""
-    return plan_kernel(kernel, shape, dtype, mesh=mesh, model=model).explain()
+    return plan_kernel(kernel, shape, dtype, mesh=mesh, model=model,
+                       sublanes=sublanes, vmem_budget=vmem_budget).explain()
 
 
 # ---------------------------------------------------------------------------
@@ -243,16 +345,17 @@ def explain(kernel: str, shape, dtype, *, mesh=None,
 # ---------------------------------------------------------------------------
 
 def _plan_uncached(kernel: str, shape: tuple[int, ...], dt: np.dtype,
-                   mesh_key, model: InterleavedMemoryModel) -> KernelPlan:
+                   mesh_key, model: InterleavedMemoryModel,
+                   sublanes: int, budget: int) -> KernelPlan:
     sig = dataclasses.replace(FAMILIES[kernel], elem_bytes=dt.itemsize)
     n_buffers = VMEM_BUFFERS.get(kernel, sig.n_streams + 1)
     if kernel.startswith("lbm."):
-        padded, block = _plan_lbm(kernel, shape, sig)
+        padded, block = _plan_lbm(kernel, shape, sig, sublanes, budget)
     elif len(shape) == 1:
-        padded, block = _plan_1d(shape[0], sig, n_buffers)
+        padded, block = _plan_1d(shape[0], sig, n_buffers, sublanes, budget)
     elif len(shape) == 2:
         tp = dict(mesh_key).get("model", 1)
-        padded, block = _plan_2d(shape, sig, tp, n_buffers,
+        padded, block = _plan_2d(shape, sig, tp, n_buffers, sublanes, budget,
                                  col_tiled=kernel in COL_TILED)
     else:
         raise ValueError(
@@ -270,6 +373,7 @@ def _plan_uncached(kernel: str, shape: tuple[int, ...], dt: np.dtype,
         layout=layout,
         naive_balance=naive,
         mesh=mesh_key,
+        sublanes=sublanes,
     )
 
 
@@ -298,6 +402,7 @@ def _naive_balance(sig: StreamSignature, model: InterleavedMemoryModel) -> float
 
 
 def _fit_block(rows: int, width: int, sig: StreamSignature, n_buffers: int,
+               sublanes: int, budget: int,
                *, col_tiled: bool = False) -> tuple[int, int, int]:
     """VMEM block for (rows, width): ``n_buffers`` resident blocks, whole
     lines per DMA, sublane-multiple rows.  Full-width kernels charge the row
@@ -309,26 +414,28 @@ def _fit_block(rows: int, width: int, sig: StreamSignature, n_buffers: int,
     padded *up* to a block multiple (returned as the first element) rather
     than the block shrunk further: an awkward row count (e.g. a large prime
     x 8) costs at most one extra block of padding instead of collapsing
-    every DMA to 8 rows."""
+    every DMA to one sublane tile."""
     brows, bcols = choose_block_shape(
         rows, width,
         bytes_per_el=sig.elem_bytes,
         n_buffers=n_buffers,
+        vmem_budget=budget,
         max_block_cols=MAX_WIDTH if col_tiled else width,
+        sublane_tile=sublanes,
     )
     bcols = min(bcols, width)
     while width % bcols:
         bcols -= LANES
     bcols = max(bcols, LANES)
-    brows = max(min(brows, rows), SUBLANES)
-    for cand in range(brows, max(brows // 2, SUBLANES) - 1, -SUBLANES):
+    brows = max(min(brows, rows), sublanes)
+    for cand in range(brows, max(brows // 2, sublanes) - 1, -sublanes):
         if rows % cand == 0:
             return rows, cand, bcols
     return round_up(rows, brows), brows, bcols
 
 
-def _plan_1d(n: int, sig: StreamSignature,
-             n_buffers: int) -> tuple[tuple[int, ...], tuple[int, ...]]:
+def _plan_1d(n: int, sig: StreamSignature, n_buffers: int, sublanes: int,
+             budget: int) -> tuple[tuple[int, ...], tuple[int, ...]]:
     """1-D stream of n elements -> (rows, width) whole-tile 2-D layout.
 
     The width is the smallest lane multiple that keeps the sublane-padded
@@ -336,27 +443,29 @@ def _plan_1d(n: int, sig: StreamSignature,
     so blocks stay within the VMEM budget for any stream count.
     """
     n = max(int(n), 1)
-    width = round_up(min(max(cdiv(n, SUBLANES), LANES), MAX_WIDTH), LANES)
-    rows = round_up(cdiv(n, width), SUBLANES)
-    rows, brows, bcols = _fit_block(rows, width, sig, n_buffers)
+    width = round_up(min(max(cdiv(n, sublanes), LANES), MAX_WIDTH), LANES)
+    rows = round_up(cdiv(n, width), sublanes)
+    rows, brows, bcols = _fit_block(rows, width, sig, n_buffers, sublanes,
+                                    budget)
     return (rows, width), (brows, bcols)
 
 
 def _plan_2d(shape: tuple[int, ...], sig: StreamSignature, tp: int,
-             n_buffers: int, *,
+             n_buffers: int, sublanes: int, budget: int, *,
              col_tiled: bool) -> tuple[tuple[int, ...], tuple[int, ...]]:
     """(rows, cols) kernel: sublane-pad rows, lane-pad cols (x tp when the
     minor dim is sharded over a model axis)."""
     r, c = shape
-    rows = round_up(max(int(r), 1), SUBLANES)
+    rows = round_up(max(int(r), 1), sublanes)
     width = round_up(max(int(c), 1), LANES * max(int(tp), 1))
-    rows, brows, bcols = _fit_block(rows, width, sig, n_buffers,
-                                    col_tiled=col_tiled)
+    rows, brows, bcols = _fit_block(rows, width, sig, n_buffers, sublanes,
+                                    budget, col_tiled=col_tiled)
     return (rows, width), (brows, bcols)
 
 
-def _plan_lbm(kernel: str, shape: tuple[int, ...],
-              sig: StreamSignature) -> tuple[tuple[int, ...], tuple[int, ...]]:
+def _plan_lbm(kernel: str, shape: tuple[int, ...], sig: StreamSignature,
+              sublanes: int,
+              budget: int) -> tuple[tuple[int, ...], tuple[int, ...]]:
     """D3Q19 collision layouts.  ``shape`` is the lattice (Q, X, Y, Z).
 
     soa : f stored (Q, S)        -- block (Q, bs), bs sized so 2 buffers of
@@ -373,16 +482,16 @@ def _plan_lbm(kernel: str, shape: tuple[int, ...],
     s = max(s, 1)
     elem = sig.elem_bytes
     if kernel == "lbm.soa":
-        budget = round_down(
-            min(VMEM_BYTES // max(q * elem * 2, 1), MAX_WIDTH), LANES
+        cap = round_down(
+            min(budget // max(q * elem * 2, 1), MAX_WIDTH), LANES
         )
-        bs = max(min(budget, round_up(s, LANES)), LANES)
+        bs = max(min(cap, round_up(s, LANES)), LANES)
         spad = round_up(s, bs)
         return (q, spad), (q, bs)
     # ivjk: super-block rows of (Q, 128) slabs
-    budget = round_down(
-        min(VMEM_BYTES // max(q * LANES * elem * 2, 1), 64), SUBLANES
+    cap = round_down(
+        min(budget // max(q * LANES * elem * 2, 1), 64), sublanes
     )
-    bsb = max(min(budget, round_up(cdiv(s, LANES), SUBLANES)), SUBLANES)
+    bsb = max(min(cap, round_up(cdiv(s, LANES), sublanes)), sublanes)
     spad = round_up(s, bsb * LANES)
     return (spad // LANES, q, LANES), (bsb, q, LANES)

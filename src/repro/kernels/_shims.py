@@ -1,0 +1,40 @@
+"""Deprecation shims for the pre-registry kernel wrappers.
+
+The hand-rolled per-family wrappers (``stream_triad``, ``jacobi_step``, ...)
+are kept importable for one release but now forward to the unified
+``repro.api.launch`` path.  Each call emits a ``FutureWarning`` naming the
+replacement -- FutureWarning (unlike DeprecationWarning) is shown by
+Python's default filters even from library frames, so callers actually see
+the one-release migration signal; the filters still de-duplicate repeats
+per call site.
+"""
+from __future__ import annotations
+
+import functools
+import warnings
+
+
+def deprecated_wrapper(kernel_name: str, *, resolver=None):
+    """Mark a wrapper as a deprecated shim for registered ``kernel_name``.
+
+    ``resolver(*args, **kwargs)`` may compute the replacement kernel name
+    from the actual call (e.g. ``lbm_step``'s ``layout=`` argument picks
+    between ``lbm.soa`` and ``lbm.ivjk``); ``kernel_name`` is the default.
+    """
+
+    def deco(fn):
+        @functools.wraps(fn)
+        def shim(*args, **kwargs):
+            target = resolver(*args, **kwargs) if resolver else kernel_name
+            warnings.warn(
+                f"{fn.__name__}() is deprecated; "
+                f"use repro.api.launch({target!r}, ...)",
+                FutureWarning,
+                stacklevel=2,
+            )
+            return fn(*args, **kwargs)
+
+        shim.__deprecated_for__ = kernel_name
+        return shim
+
+    return deco

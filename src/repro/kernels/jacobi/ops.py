@@ -1,4 +1,10 @@
-"""Jacobi wrappers: padding policy + multi-sweep driver."""
+"""Jacobi: registry entry + multi-sweep driver.
+
+Layout policy (the paper's SS2.3 parameters, TPU form) comes from the
+planner: columns padded to a 128-lane multiple, interior row count padded to
+a sublane multiple, block rows sized to the VMEM budget; the three shifted
+views give each block its halo without overlap reads.
+"""
 from __future__ import annotations
 
 import functools
@@ -6,22 +12,23 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core.planner import plan_kernel
-from repro.kernels.jacobi import kernel
+from repro.api import dispatch
+from repro.api.registry import register_kernel
+from repro.core.autotune import StreamSignature
+from repro.kernels._shims import deprecated_wrapper
+from repro.kernels.jacobi import kernel, ref
 
 
-@jax.jit
-def jacobi_step(src: jax.Array) -> jax.Array:
-    """One aligned Pallas sweep on an (N, M) grid (boundaries copied).
+def _plan_args(src, **_scalars):
+    """Jacobi plans on its *interior* rows (boundaries are copied through)."""
+    n, m = src.shape
+    return (n - 2, m), src.dtype
 
-    Layout policy (the paper's SS2.3 parameters, TPU form) comes from the
-    planner: columns padded to a 128-lane multiple, interior row count padded
-    to a sublane multiple, block rows sized to the VMEM budget; the three
-    shifted views give each block its halo without overlap reads.
-    """
+
+@functools.partial(jax.jit, static_argnames=("plan",))
+def _step(src, *, plan):
     n, m = src.shape
     rows = n - 2
-    plan = plan_kernel("jacobi", (rows, m), src.dtype)
     prow, width = plan.padded_shape
     padded = jnp.pad(src, ((0, prow - rows), (0, width - m)))
     sa = padded[:-2][:prow]
@@ -31,9 +38,34 @@ def jacobi_step(src: jax.Array) -> jax.Array:
     return src.at[1:-1, :].set(out[:rows, :m])
 
 
-@functools.partial(jax.jit, static_argnames=("iters",))
+@register_kernel("jacobi", signature=StreamSignature(n_read=1, n_write=1),
+                 ref=lambda src: ref.jacobi_step(src), plan_args=_plan_args,
+                 vmem_buffers=4)
+def _launch_jacobi(plan, src):
+    """One aligned 5-point sweep on an (N, M) grid (boundaries copied).
+    Rows stream once from HBM; the 3 shifted row views are distinct Pallas
+    operands, hence the 4-buffer VMEM geometry."""
+    return _step(src, plan=plan)
+
+
+@deprecated_wrapper("jacobi")
+def jacobi_step(src: jax.Array) -> jax.Array:
+    return dispatch.launch("jacobi", src)
+
+
+@functools.partial(jax.jit, static_argnames=("iters", "plan"))
+def _sweeps(src, *, iters, plan):
+    return jax.lax.fori_loop(
+        0, iters, lambda _, x: dispatch.launch("jacobi", x, plan=plan), src
+    )
+
+
 def jacobi_sweeps(src: jax.Array, iters: int) -> jax.Array:
-    return jax.lax.fori_loop(0, iters, lambda _, x: jacobi_step(x), src)
+    # Resolve the plan outside the jitted loop: jit's trace cache keys on
+    # shapes/statics only, so an ambient plan_context change must surface
+    # here (as a new static plan), not be masked by a stale trace.
+    plan = dispatch.plan_for("jacobi", _plan_args(src)[0], src.dtype)
+    return _sweeps(src, iters=iters, plan=plan)
 
 
 def jacobi_bytes(n: int, m: int, elem_bytes: int = 8, *, rfo: bool = True) -> int:

@@ -1,4 +1,12 @@
-"""LBM step wrappers: layout transforms, full step, traffic accounting."""
+"""LBM D3Q19 step: registry entries per layout, traffic accounting.
+
+``lbm.soa`` and ``lbm.ivjk`` register as separate kernels (the paper's Fig. 7
+layout comparison is a *planning* decision, so it lives in the kernel name).
+Pad multiples and block shapes come from the planner's VMEM-budget analysis
+of the 19+19 streams; the flatten/pad helper routes through the plan's
+padded shape, so the lattice is padded exactly once even when the plan has
+widened the minor dim beyond the block multiple (e.g. for a mesh).
+"""
 from __future__ import annotations
 
 import functools
@@ -6,28 +14,84 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.api import dispatch
+from repro.api.registry import register_kernel
 from repro.core.aliasing import InterleavedMemoryModel
-from repro.core.autotune import choose_layout
-from repro.core.layout import round_up
-from repro.core.planner import plan_kernel
+from repro.core.autotune import StreamSignature, choose_layout
+from repro.kernels._shims import deprecated_wrapper
 from repro.kernels.lbm import kernel, ref
 from repro.kernels.lbm.ref import Q
 
 LAYOUTS = ("soa", "ivjk")
 
+_SIG = StreamSignature(n_read=19, n_write=19)
 
-def _flatten_pad(f: jax.Array, multiple: int) -> tuple[jax.Array, int]:
-    """(Q, X, Y, Z) -> (Q, S_pad)."""
+
+def _plan_args(f, **_scalars):
+    return tuple(f.shape), f.dtype
+
+
+def _flatten_pad(f: jax.Array, plan) -> tuple[jax.Array, int]:
+    """(Q, X, Y, Z) -> (Q, S_pad) with S_pad taken from the *plan's* padded
+    shape -- never recomputed from a block multiple, so the lattice cannot be
+    double-padded (or under-padded) relative to the grid the plan derived."""
     q = f.shape[0]
     s = int(f[0].size)
-    spad = round_up(s, multiple)
+    if len(plan.padded_shape) == 2:          # soa: (Q, S_pad)
+        spad = plan.padded_shape[1]
+    else:                                    # ivjk: (S_pad/128, Q, 128)
+        spad = plan.padded_shape[0] * plan.padded_shape[2]
+    if spad < s:
+        raise ValueError(
+            f"plan {plan.kernel} pads {spad} sites < logical {s}"
+        )
     flat = f.reshape(q, s)
     if spad != s:
         flat = jnp.pad(flat, ((0, 0), (0, spad - s)))
     return flat, s
 
 
-@functools.partial(jax.jit, static_argnames=("layout",))
+@functools.partial(jax.jit, static_argnames=("plan",))
+def _step_soa(f, omega, mask, *, plan):
+    fprop = ref.propagate(f)
+    flat, s = _flatten_pad(fprop, plan)
+    post = kernel.collide_soa(flat, omega, bs=plan.block_cols)
+    post = post[:, :s].reshape(f.shape)
+    return post if mask is None else jnp.where(mask[None], post, f)
+
+
+@functools.partial(jax.jit, static_argnames=("plan",))
+def _step_ivjk(f, omega, mask, *, plan):
+    fprop = ref.propagate(f)
+    flat, s = _flatten_pad(fprop, plan)
+    ivjk = flat.reshape(Q, -1, 128).transpose(1, 0, 2)  # (S/128, Q, 128)
+    post = kernel.collide_ivjk(ivjk, omega, bsb=plan.block_rows)
+    post = post.transpose(1, 0, 2).reshape(Q, -1)[:, :s].reshape(f.shape)
+    return post if mask is None else jnp.where(mask[None], post, f)
+
+
+def _lbm_ref(f, *, omega, mask=None):
+    post = ref.lbm_step(f, omega)
+    return post if mask is None else jnp.where(mask[None], post, f)
+
+
+@register_kernel("lbm.soa", signature=_SIG, ref=_lbm_ref,
+                 plan_args=_plan_args)
+def _launch_soa(plan, f, *, omega, mask=None):
+    """Propagate (lax roll) + Pallas BGK collision, f stored (Q, S)."""
+    return _step_soa(f, omega, mask, plan=plan)
+
+
+@register_kernel("lbm.ivjk", signature=_SIG, ref=_lbm_ref,
+                 plan_args=_plan_args)
+def _launch_ivjk(plan, f, *, omega, mask=None):
+    """Collision with directions interleaved at lane granularity
+    (the paper's auto-skewed IvJK layout)."""
+    return _step_ivjk(f, omega, mask, plan=plan)
+
+
+@deprecated_wrapper("lbm.ivjk",
+                    resolver=lambda *a, **kw: f"lbm.{kw.get('layout', 'ivjk')}")
 def lbm_step(
     f: jax.Array,
     omega: float,
@@ -35,32 +99,28 @@ def lbm_step(
     *,
     layout: str = "ivjk",
 ) -> jax.Array:
-    """One D3Q19 step on f[v, X, Y, Z]: lax-roll propagation + Pallas
-    collision in the chosen stream layout.  Pad multiples and block shapes
-    come from the planner's VMEM-budget analysis of the 19+19 streams."""
     if layout not in LAYOUTS:
         raise ValueError(f"layout must be one of {LAYOUTS}")
-    shape = f.shape
-    fprop = ref.propagate(f)
-    if layout == "soa":
-        plan = plan_kernel("lbm.soa", shape, f.dtype)
-        flat, s = _flatten_pad(fprop, plan.block_cols)
-        post = kernel.collide_soa(flat, omega, bs=plan.block_cols)
-        post = post[:, :s].reshape(shape)
-    else:
-        plan = plan_kernel("lbm.ivjk", shape, f.dtype)
-        flat, s = _flatten_pad(fprop, plan.block_rows * 128)
-        ivjk = flat.reshape(Q, -1, 128).transpose(1, 0, 2)  # (S/128, Q, 128)
-        post = kernel.collide_ivjk(ivjk, omega, bsb=plan.block_rows)
-        post = post.transpose(1, 0, 2).reshape(Q, -1)[:, :s].reshape(shape)
-    if mask is not None:
-        post = jnp.where(mask[None], post, f)
-    return post
+    return dispatch.launch(f"lbm.{layout}", f, omega=omega, mask=mask)
 
 
-@functools.partial(jax.jit, static_argnames=("iters", "layout"))
-def lbm_run(f: jax.Array, omega: float, iters: int, *, layout: str = "ivjk") -> jax.Array:
-    return jax.lax.fori_loop(0, iters, lambda _, x: lbm_step(x, omega, layout=layout), f)
+@functools.partial(jax.jit, static_argnames=("iters", "layout", "plan"))
+def _run(f, omega, *, iters, layout, plan):
+    return jax.lax.fori_loop(
+        0, iters,
+        lambda _, x: dispatch.launch(f"lbm.{layout}", x, omega=omega,
+                                     plan=plan), f,
+    )
+
+
+def lbm_run(f: jax.Array, omega: float, iters: int, *,
+            layout: str = "ivjk") -> jax.Array:
+    if layout not in LAYOUTS:
+        raise ValueError(f"layout must be one of {LAYOUTS}")
+    # Plan outside the jitted loop so an ambient plan_context change shows
+    # up as a new static plan instead of being masked by jit's trace cache.
+    plan = dispatch.plan_for(f"lbm.{layout}", tuple(f.shape), f.dtype)
+    return _run(f, omega, iters=iters, layout=layout, plan=plan)
 
 
 def init_equilibrium(n: int, dtype=jnp.float32) -> jax.Array:

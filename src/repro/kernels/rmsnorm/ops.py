@@ -1,4 +1,8 @@
-"""Jitted wrappers: flatten leading dims, planner-derived lane padding."""
+"""RMSNorm (plain + gated): registry entries, planner-derived lane padding.
+
+Leading dims flatten into rows; the planner pads rows to the dtype's sublane
+tile and the feature dim to a lane multiple (x TP when a mesh is ambient).
+"""
 from __future__ import annotations
 
 import functools
@@ -6,36 +10,82 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core.planner import plan_kernel
-from repro.kernels.rmsnorm import kernel
+from repro.api import dispatch
+from repro.api.registry import register_kernel
+from repro.core.autotune import StreamSignature
+from repro.kernels._shims import deprecated_wrapper
+from repro.kernels.rmsnorm import kernel, ref
+from repro.kernels.util import plan_args_rows
 
 
-def _prep(x: jax.Array, family: str):
+def _plan_args_plain(x, scale, **_scalars):
+    if scale.shape != x.shape[-1:]:
+        raise ValueError(
+            f"scale shape {scale.shape} must match minor dim of {x.shape}"
+        )
+    return plan_args_rows(x)
+
+
+def _plan_args_gated(x, z, scale, **_scalars):
+    # z is padded with the plan derived from x; a mismatched z would
+    # otherwise be silently zero-padded into wrong output rows.
+    if z.shape != x.shape:
+        raise ValueError(f"z shape {z.shape} must match x shape {x.shape}")
+    return _plan_args_plain(x, scale)
+
+
+def _pad_rows(x: jax.Array, plan) -> tuple[jax.Array, tuple[int, ...], int, int]:
     *lead, d = x.shape
     rows = 1
     for s in lead:
         rows *= s
-    plan = plan_kernel(family, (rows, d), x.dtype)
     rp, wp = plan.padded_shape
-    x2 = x.reshape(rows, d)
-    x2 = jnp.pad(x2, ((0, rp - rows), (0, wp - d)))
-    return x2, lead, rows, d, wp, plan
+    x2 = jnp.pad(x.reshape(rows, d), ((0, rp - rows), (0, wp - d)))
+    return x2, tuple(lead), rows, d
 
 
-@functools.partial(jax.jit, static_argnames=("eps",))
-def rmsnorm(x: jax.Array, scale: jax.Array, *, eps: float = 1e-6) -> jax.Array:
-    x2, lead, rows, d, wp, plan = _prep(x, "rmsnorm")
-    s = jnp.pad(scale, (0, wp - d))
+@functools.partial(jax.jit, static_argnames=("plan", "eps"))
+def _rmsnorm(x, scale, *, plan, eps):
+    x2, lead, rows, d = _pad_rows(x, plan)
+    s = jnp.pad(scale, (0, plan.width - d))
     y = kernel.rmsnorm2d(x2, s, d_logical=d, eps=eps, brows=plan.block_rows)
     return y[:rows, :d].reshape(*lead, d)
 
 
-@functools.partial(jax.jit, static_argnames=("eps",))
-def gated_rmsnorm(x: jax.Array, z: jax.Array, scale: jax.Array, *,
-                  eps: float = 1e-6) -> jax.Array:
-    x2, lead, rows, d, wp, plan = _prep(x, "rmsnorm.gated")
-    z2 = _prep(z, "rmsnorm.gated")[0]
-    s = jnp.pad(scale, (0, wp - d))
+@functools.partial(jax.jit, static_argnames=("plan", "eps"))
+def _gated(x, z, scale, *, plan, eps):
+    x2, lead, rows, d = _pad_rows(x, plan)
+    z2 = _pad_rows(z, plan)[0]
+    s = jnp.pad(scale, (0, plan.width - d))
     y = kernel.gated_rmsnorm2d(x2, z2, s, d_logical=d, eps=eps,
                                brows=plan.block_rows)
     return y[:rows, :d].reshape(*lead, d)
+
+
+@register_kernel("rmsnorm", signature=StreamSignature(n_read=2, n_write=1),
+                 ref=lambda x, scale, *, eps=1e-6: ref.rmsnorm(x, scale, eps),
+                 plan_args=_plan_args_plain)
+def _launch_rmsnorm(plan, x, scale, *, eps: float = 1e-6):
+    """y = x * rsqrt(mean(x^2) + eps) * scale, fused over row blocks."""
+    return _rmsnorm(x, scale, plan=plan, eps=eps)
+
+
+@register_kernel("rmsnorm.gated",
+                 signature=StreamSignature(n_read=3, n_write=1),
+                 ref=lambda x, z, scale, *, eps=1e-6:
+                     ref.gated_rmsnorm(x, z, scale, eps),
+                 plan_args=_plan_args_gated)
+def _launch_gated(plan, x, z, scale, *, eps: float = 1e-6):
+    """Gated variant: normalize x * silu(z) (mamba2/xlstm norm path)."""
+    return _gated(x, z, scale, plan=plan, eps=eps)
+
+
+@deprecated_wrapper("rmsnorm")
+def rmsnorm(x: jax.Array, scale: jax.Array, *, eps: float = 1e-6) -> jax.Array:
+    return dispatch.launch("rmsnorm", x, scale, eps=eps)
+
+
+@deprecated_wrapper("rmsnorm.gated")
+def gated_rmsnorm(x: jax.Array, z: jax.Array, scale: jax.Array, *,
+                  eps: float = 1e-6) -> jax.Array:
+    return dispatch.launch("rmsnorm.gated", x, z, scale, eps=eps)

@@ -1,13 +1,12 @@
-"""Jitted public wrappers for the STREAM kernels (1-D API).
+"""STREAM kernels as registry entries (1-D API).
 
-The wrapper owns the layout decision, but no longer hard-codes it: the
-analytic planner (``core/planner``) derives the padded 2-D shape and the
-VMEM block from each kernel's stream signature, memoized per
-``(kernel, shape, dtype)``.  The wrapper pads+reshapes the 1-D array to the
-planned whole-tile form (``to_tiles``), runs the Pallas kernel over the
-planned blocks, and slices the logical result back out.  ``bytes_moved``
-reports STREAM-convention traffic (no RFO) and ``bytes_moved_rfo`` the true
-traffic, mirroring the paper's 4/3 remark.
+Each kernel declares its stream signature, oracle, and Pallas body via
+``@register_kernel``; the unified ``repro.api.launch`` path resolves the
+analytic plan (padded 2-D shape, VMEM block) under the ambient
+``PlanContext`` and calls the body.  The old public wrappers
+(``stream_copy`` etc.) remain as deprecated shims forwarding to the
+registry.  ``bytes_moved`` reports STREAM-convention traffic (no RFO) and
+``bytes_moved_rfo`` the true traffic, mirroring the paper's 4/3 remark.
 """
 from __future__ import annotations
 
@@ -15,9 +14,13 @@ import functools
 
 import jax
 
-from repro.core.planner import KernelPlan, plan_kernel
-from repro.kernels.stream import kernel
-from repro.kernels.util import from_tiles, to_tiles
+from repro.api import dispatch
+from repro.api.registry import register_kernel
+from repro.core.autotune import StreamSignature
+from repro.core.planner import KernelPlan
+from repro.kernels._shims import deprecated_wrapper
+from repro.kernels.stream import kernel, ref
+from repro.kernels.util import from_tiles, plan_args_1d, to_tiles
 
 
 @functools.partial(jax.jit, static_argnames=("plan",))
@@ -46,27 +49,60 @@ def _triad(b, c, s, *, plan):
     return from_tiles(kernel.triad2d(b2, c2, s, brows=plan.block_rows), n)
 
 
-def stream_copy(a: jax.Array, *, plan: KernelPlan | None = None) -> jax.Array:
-    plan = plan or plan_kernel("stream.copy", a.shape, a.dtype)
+@register_kernel("stream.copy", signature=StreamSignature(n_read=1, n_write=1),
+                 ref=lambda a: ref.copy(a), plan_args=plan_args_1d)
+def _launch_copy(plan, a):
+    """C = A, streamed as whole (sublane, 128) tiles."""
     return _copy(a, plan=plan)
 
 
-def stream_scale(c: jax.Array, s: float, *,
-                 plan: KernelPlan | None = None) -> jax.Array:
-    plan = plan or plan_kernel("stream.scale", c.shape, c.dtype)
+@register_kernel("stream.scale",
+                 signature=StreamSignature(n_read=1, n_write=1),
+                 ref=lambda c, *, s: ref.scale(c, s), plan_args=plan_args_1d)
+def _launch_scale(plan, c, *, s):
+    """B = s * C."""
     return _scale(c, s, plan=plan)
 
 
-def stream_add(a: jax.Array, b: jax.Array, *,
-               plan: KernelPlan | None = None) -> jax.Array:
-    plan = plan or plan_kernel("stream.add", a.shape, a.dtype)
+@register_kernel("stream.add", signature=StreamSignature(n_read=2, n_write=1),
+                 ref=lambda a, b: ref.add(a, b), plan_args=plan_args_1d)
+def _launch_add(plan, a, b):
+    """C = A + B."""
     return _add(a, b, plan=plan)
 
 
+@register_kernel("stream.triad",
+                 signature=StreamSignature(n_read=2, n_write=1),
+                 ref=lambda b, c, *, s: ref.triad(b, c, s),
+                 plan_args=plan_args_1d)
+def _launch_triad(plan, b, c, *, s):
+    """A = B + s * C (the paper's bandwidth headline)."""
+    return _triad(b, c, s, plan=plan)
+
+
+# ---- deprecated shims (one release): forward to the registry --------------
+
+@deprecated_wrapper("stream.copy")
+def stream_copy(a: jax.Array, *, plan: KernelPlan | None = None) -> jax.Array:
+    return dispatch.launch("stream.copy", a, plan=plan)
+
+
+@deprecated_wrapper("stream.scale")
+def stream_scale(c: jax.Array, s: float, *,
+                 plan: KernelPlan | None = None) -> jax.Array:
+    return dispatch.launch("stream.scale", c, s=s, plan=plan)
+
+
+@deprecated_wrapper("stream.add")
+def stream_add(a: jax.Array, b: jax.Array, *,
+               plan: KernelPlan | None = None) -> jax.Array:
+    return dispatch.launch("stream.add", a, b, plan=plan)
+
+
+@deprecated_wrapper("stream.triad")
 def stream_triad(b: jax.Array, c: jax.Array, s: float, *,
                  plan: KernelPlan | None = None) -> jax.Array:
-    plan = plan or plan_kernel("stream.triad", b.shape, b.dtype)
-    return _triad(b, c, s, plan=plan)
+    return dispatch.launch("stream.triad", b, c, s=s, plan=plan)
 
 
 def bytes_moved(op: str, n: int, elem_bytes: int = 8) -> int:

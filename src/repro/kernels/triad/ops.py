@@ -1,8 +1,7 @@
-"""Vector-triad wrappers: aligned, phased, and segmented variants.
+"""Vector-triad: registry entry plus phased/segmented experiment variants.
 
-``vector_triad``            -- planner-derived tile-aligned layout (the
-                               optimized case): padded shape and VMEM block
-                               come from ``plan_kernel("triad", ...)``.
+``repro.api.launch("triad", b, c, d)`` is the planner-driven aligned case.
+``vector_triad``            -- deprecated shim forwarding to the registry.
 ``vector_triad_phased``     -- per-stream element phases, reproducing the
                                paper's offset experiment: each array lives at
                                ``phase[k]`` elements into a padded buffer, so
@@ -18,10 +17,14 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core.planner import KernelPlan, plan_kernel
+from repro.api import dispatch
+from repro.api.registry import register_kernel
+from repro.core.autotune import StreamSignature
+from repro.core.planner import KernelPlan
 from repro.core.segmented import SegmentedArray, seg_map
-from repro.kernels.triad import kernel
-from repro.kernels.util import from_tiles, to_tiles
+from repro.kernels._shims import deprecated_wrapper
+from repro.kernels.triad import kernel, ref
+from repro.kernels.util import from_tiles, plan_args_1d, to_tiles
 
 
 @functools.partial(jax.jit, static_argnames=("plan",))
@@ -32,10 +35,18 @@ def _triad(b, c, d, *, plan):
     return from_tiles(kernel.triad2d(b2, c2, d2, brows=plan.block_rows), n)
 
 
+@register_kernel("triad", signature=StreamSignature(n_read=3, n_write=1),
+                 ref=lambda b, c, d: ref.triad(b, c, d),
+                 plan_args=plan_args_1d)
+def _launch_triad(plan, b, c, d):
+    """Schoenauer vector triad A = B + C * D (paper SS2.2)."""
+    return _triad(b, c, d, plan=plan)
+
+
+@deprecated_wrapper("triad")
 def vector_triad(b: jax.Array, c: jax.Array, d: jax.Array, *,
                  plan: KernelPlan | None = None) -> jax.Array:
-    plan = plan or plan_kernel("triad", b.shape, b.dtype)
-    return _triad(b, c, d, plan=plan)
+    return dispatch.launch("triad", b, c, d, plan=plan)
 
 
 @functools.partial(jax.jit, static_argnames=("phases", "plan"))
@@ -63,7 +74,7 @@ def vector_triad_phased(
     re-alignment copies -- the cost shows up in HLO bytes (see
     benchmarks/vector_triad.py), which is the dry-run observable for the
     paper's offset sweep."""
-    plan = plan or plan_kernel("triad", b.shape, b.dtype)
+    plan = plan or dispatch.plan_for("triad", b.shape, b.dtype)
     return _triad_phased(b, c, d, phases=tuple(phases), plan=plan)
 
 
@@ -74,13 +85,7 @@ def vector_triad_segmented(
     planned on its own logical length (short segments get narrow tiles)."""
 
     def _one(bb: jax.Array, cc: jax.Array, dd: jax.Array) -> jax.Array:
-        seg_plan = plan_kernel("triad", bb.shape, bb.dtype)
-        b2, n = to_tiles(bb, plan=seg_plan)
-        c2, _ = to_tiles(cc, plan=seg_plan)
-        d2, _ = to_tiles(dd, plan=seg_plan)
-        return from_tiles(
-            kernel.triad2d(b2, c2, d2, brows=seg_plan.block_rows), n
-        )
+        return dispatch.launch("triad", bb, cc, dd)
 
     return seg_map(_one, a, b, c, d)
 

@@ -55,6 +55,24 @@ def from_tiles(x2: jax.Array, n: int) -> jax.Array:
     return x2.reshape(-1)[:n]
 
 
+def plan_args_1d(a: jax.Array, *_rest, **_scalars):
+    """Registry ``plan_args`` for 1-D streaming kernels: plan on the first
+    array's logical length and dtype (all streams share one layout)."""
+    if a.ndim != 1:
+        raise ValueError(f"1-D stream kernel got rank-{a.ndim} array")
+    return tuple(a.shape), a.dtype
+
+
+def plan_args_rows(x: jax.Array, *_rest, **_scalars):
+    """Registry ``plan_args`` for row-wise 2-D kernels over (..., d) inputs:
+    leading dims flatten into rows, the minor dim is the lane axis."""
+    *lead, d = x.shape
+    rows = 1
+    for s in lead:
+        rows *= s
+    return (rows, d), x.dtype
+
+
 def block_rows(rows: int, target: int = 256) -> int:
     """Rows per VMEM block: a sublane multiple that divides the padded rows."""
     b = min(rows, round_up(target, SUBLANES))

@@ -1,4 +1,8 @@
-"""Jitted wrapper: planner-derived padding policy + mean reduction."""
+"""Tiled cross-entropy: registry entry, planner-derived online-softmax tile.
+
+Padded *tokens* get label 0 against a -inf-masked row contribution of
+exactly lse-only; they are excluded by slicing before the mean.
+"""
 from __future__ import annotations
 
 import functools
@@ -6,31 +10,56 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.api import dispatch
+from repro.api.registry import register_kernel
+from repro.core.autotune import StreamSignature
 from repro.core.layout import round_up
-from repro.core.planner import plan_kernel
-from repro.kernels.xent import kernel
+from repro.kernels._shims import deprecated_wrapper
+from repro.kernels.xent import kernel, ref
 
 
-@functools.partial(jax.jit, static_argnames=("logical_v", "bt", "bv"))
-def xent_mean(logits: jax.Array, labels: jax.Array, *, logical_v: int = 0,
-              bt: int | None = None, bv: int | None = None) -> jax.Array:
-    """Mean NLL over (T,) tokens; pads T and V to (bt, bv) tile multiples.
+def _plan_args(logits, labels=None, **_scalars):
+    return tuple(logits.shape), logits.dtype
 
-    The (bt, bv) tile defaults to the planner's choice for this (T, V) and
-    dtype (one online-softmax working set per VMEM budget); explicit bt/bv
-    remain as overrides.  Padded *tokens* get label 0 against a -inf-masked
-    row contribution of exactly lse-only... they are excluded by weighting
-    instead.
-    """
+
+def _ref(logits, labels, *, logical_v: int = 0):
+    lv = logical_v or logits.shape[-1]
+    return ref.xent(logits, labels, logical_v=lv).mean()
+
+
+@functools.partial(jax.jit, static_argnames=("logical_v", "tp", "vp",
+                                             "bt", "bv"))
+def _xent_padded(logits, labels, *, logical_v, tp, vp, bt, bv):
     t, v = logits.shape
-    logical_v = logical_v or v
-    if bt is None or bv is None:
-        plan = plan_kernel("xent", (t, v), logits.dtype)
-        bt = bt or plan.block_rows
-        bv = bv or plan.block_cols
-    tp = round_up(t, bt)
-    vp = round_up(v, bv)
     lg = jnp.pad(logits, ((0, tp - t), (0, vp - v)))
     lb = jnp.pad(labels.astype(jnp.int32), (0, tp - t))
     nll = kernel.xent_tiled(lg, lb, logical_v=logical_v, bt=bt, bv=bv)
     return nll[:t].mean()
+
+
+@register_kernel("xent", signature=StreamSignature(n_read=2, n_write=1),
+                 ref=_ref, plan_args=_plan_args, col_tiled=True)
+def _launch_xent(plan, logits, labels, *, logical_v: int = 0):
+    """Mean NLL over (T,) tokens; the plan's (block_rows, block_cols) is the
+    online-softmax working set, (T, V) padded to the planned physical
+    shape."""
+    t, v = logits.shape
+    tp, vp = plan.padded_shape
+    return _xent_padded(logits, labels, logical_v=logical_v or v,
+                        tp=tp, vp=vp, bt=plan.block_rows, bv=plan.block_cols)
+
+
+@deprecated_wrapper("xent")
+def xent_mean(logits: jax.Array, labels: jax.Array, *, logical_v: int = 0,
+              bt: int | None = None, bv: int | None = None) -> jax.Array:
+    """Deprecated shim.  Explicit ``bt``/``bv`` remain as overrides of the
+    planned tile; without them this is ``api.launch("xent", ...)``."""
+    if bt is None and bv is None:
+        return dispatch.launch("xent", logits, labels, logical_v=logical_v)
+    t, v = logits.shape
+    if bt is None or bv is None:  # plan only for the tile not given
+        plan = dispatch.plan_for("xent", (t, v), logits.dtype)
+        bt = bt or plan.block_rows
+        bv = bv or plan.block_cols
+    return _xent_padded(logits, labels, logical_v=logical_v or v,
+                        tp=round_up(t, bt), vp=round_up(v, bv), bt=bt, bv=bv)

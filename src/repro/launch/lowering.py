@@ -28,6 +28,8 @@ import numpy as np
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
+from repro.api import context as api_context
+from repro.api import dispatch as api_dispatch
 from repro.configs import get_config
 from repro.configs.shapes import SHAPES, ShapeSpec, input_specs, shape_applicable
 from repro.core import planner as planner_lib
@@ -57,8 +59,16 @@ def kernel_plan(kernel: str, shape, dtype, mesh=None) -> planner_lib.KernelPlan:
 
     Returns the memoized ``KernelPlan`` for a Pallas kernel family on this
     mesh -- mesh-aware minor-dim padding included -- so cell lowering and the
-    roofline report consume the same plans the kernel wrappers execute."""
-    return planner_lib.plan_kernel(kernel, shape, dtype, mesh=mesh)
+    roofline report consume the same plans the kernel wrappers execute.
+    With ``mesh=None`` the ambient ``repro.api.plan_context`` decides (mesh,
+    sublane policy, VMEM budget, plan overrides); an explicit mesh overrides
+    just the mesh.  Routed through ``api.dispatch.plan_for`` so this report
+    can never diverge from the plan ``launch()`` actually executes.
+    """
+    ctx = api_context.current_context()
+    if mesh is not None:
+        ctx = ctx.evolve(mesh=mesh)
+    return api_dispatch.plan_for(kernel, shape, dtype, ctx=ctx)
 
 
 def kernel_plan_report(cases, mesh=None) -> str:

@@ -23,6 +23,7 @@ def main() -> None:
     import jax
     import jax.numpy as jnp
 
+    from repro import api
     from repro.configs import get_config, reduce_for_smoke
     from repro.launch.mesh import make_production_mesh
     from repro.models import build_model
@@ -37,31 +38,36 @@ def main() -> None:
         mesh = make_production_mesh(multi_pod=(args.mesh == "multipod"))
         cfg, _ = cfg.padded_for_mesh(16)
 
-    model = build_model(cfg)
-    params = model.init(jax.random.PRNGKey(0))
-    max_len = args.prompt_len + args.gen
-    cache = init_params(jax.random.PRNGKey(1),
-                        model.cache_defs(args.batch, max_len))
-    if cfg.family == "encdec":
-        frames = jax.random.normal(jax.random.PRNGKey(2),
-                                   (args.batch, cfg.n_frames, cfg.d_model),
-                                   cfg.adtype)
-        cache["cross_k"], cache["cross_v"] = model.prefill_cross(params, frames)
+    # Ambient PlanContext: the decode path's kernels (and the plan report
+    # below) all see the serving mesh without per-call plumbing.
+    with api.plan_context(mesh=mesh):
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        max_len = args.prompt_len + args.gen
+        cache = init_params(jax.random.PRNGKey(1),
+                            model.cache_defs(args.batch, max_len))
+        if cfg.family == "encdec":
+            frames = jax.random.normal(jax.random.PRNGKey(2),
+                                       (args.batch, cfg.n_frames, cfg.d_model),
+                                       cfg.adtype)
+            cache["cross_k"], cache["cross_v"] = model.prefill_cross(params,
+                                                                     frames)
 
-    decode = jax.jit(steps_lib.make_decode_step(model))
-    prompts = jax.random.randint(jax.random.PRNGKey(3),
-                                 (args.batch, args.prompt_len), 0,
-                                 cfg.vocab_size)
-    t0 = time.time()
-    for t in range(args.prompt_len):
-        tok, cache = decode(params, cache, prompts[:, t:t + 1])
-    outs = [tok]
-    for _ in range(args.gen - 1):
-        tok, cache = decode(params, cache, outs[-1])
-        outs.append(tok)
-    result = jnp.concatenate(outs, axis=1)
-    jax.block_until_ready(result)
-    dt = time.time() - t0
+        print(api.explain("rmsnorm", (args.batch, cfg.d_model), cfg.adtype))
+        decode = jax.jit(steps_lib.make_decode_step(model))
+        prompts = jax.random.randint(jax.random.PRNGKey(3),
+                                     (args.batch, args.prompt_len), 0,
+                                     cfg.vocab_size)
+        t0 = time.time()
+        for t in range(args.prompt_len):
+            tok, cache = decode(params, cache, prompts[:, t:t + 1])
+        outs = [tok]
+        for _ in range(args.gen - 1):
+            tok, cache = decode(params, cache, outs[-1])
+            outs.append(tok)
+        result = jnp.concatenate(outs, axis=1)
+        jax.block_until_ready(result)
+        dt = time.time() - t0
     print(f"{args.arch}: {args.batch} requests x {args.gen} tokens "
           f"in {dt:.2f}s ({args.batch * args.gen / dt:.1f} tok/s)")
     print("request 0:", result[0, :16].tolist())

@@ -35,6 +35,7 @@ def main() -> None:
 
     import jax
 
+    from repro import api
     from repro.configs import get_config, get_schedule, reduce_for_smoke
     from repro.data.pipeline import DataConfig
     from repro.launch.mesh import make_production_mesh, make_test_mesh
@@ -83,7 +84,12 @@ def main() -> None:
         TrainerConfig(n_steps=args.steps, ckpt_every=max(args.steps // 4, 1),
                       ckpt_dir=args.ckpt_dir, log_every=5),
     )
-    with rules_lib.use_rules(rules, mesh=mesh if tp > 1 else None):
+    # One ambient PlanContext for the whole run: every kernel launched by a
+    # train step now plans against the production mesh (shard-aligned
+    # physical shapes) without any per-call plumbing.
+    plan_mesh = mesh if tp > 1 else None
+    with api.plan_context(mesh=plan_mesh), \
+            rules_lib.use_rules(rules, mesh=plan_mesh):
         metrics = trainer.train(jax.random.PRNGKey(0))
     print(f"done: {len(metrics)} steps, "
           f"loss {metrics[0]['loss']:.3f} -> {metrics[-1]['loss']:.3f}")

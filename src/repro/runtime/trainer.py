@@ -14,6 +14,7 @@ from typing import Callable
 
 import jax
 
+from repro import api
 from repro.checkpoint.manager import CheckpointManager
 from repro.data.pipeline import DataConfig, make_batch
 from repro.optim import adamw
@@ -33,15 +34,46 @@ class TrainerConfig:
 
 class Trainer:
     def __init__(self, model, data_cfg: DataConfig, opt_cfg: adamw.AdamWConfig,
-                 schedule, tcfg: TrainerConfig, *, sharding=None):
+                 schedule, tcfg: TrainerConfig, *, sharding=None, mesh=None):
         self.model = model
         self.data_cfg = data_cfg
         self.opt_cfg = opt_cfg
         self.tcfg = tcfg
         self.sharding = sharding
+        # Layout-planning mesh: an explicit arg wins; otherwise the ambient
+        # plan_context is consulted *at use time* (plan_hot_kernels/train),
+        # so a launcher may construct the Trainer first and enter
+        # plan_context(mesh=...) around the run.
+        self.mesh = mesh
         self.ckpt = CheckpointManager(tcfg.ckpt_dir)
         self.step_fn = jax.jit(steps_lib.make_train_step(model, opt_cfg, schedule))
         self.metrics: list[dict] = []
+        self.kernel_plans: dict[str, object] = {}
+
+    def _plan_mesh(self):
+        return self.mesh if self.mesh is not None else api.current_context().mesh
+
+    def plan_hot_kernels(self) -> dict[str, object]:
+        """Ask the registry for this run's hot-kernel plans under the
+        trainer's mesh: the per-token norm over (tokens, d_model) and the
+        loss kernel over (tokens, vocab).  Memoized in the plan cache, so
+        this is free after the first step -- and it is the single place the
+        training path commits to a layout policy (paper SS2.3: one analysis
+        governs every loop kernel)."""
+        d = self.data_cfg
+        tokens = max(d.global_batch * d.seq_len, 1)
+        adtype = getattr(getattr(self.model, "cfg", None), "adtype", "float32")
+        with api.plan_context(mesh=self._plan_mesh()):
+            plans = {}
+            if d.d_model:
+                plans["rmsnorm"] = api.plan_for(
+                    "rmsnorm", (tokens, d.d_model), adtype)
+            plans["xent"] = api.plan_for(
+                "xent", (tokens, d.vocab_size), "float32")
+            for name, plan in plans.items():
+                log.debug("kernel plan %s:\n%s", name, plan.explain())
+        self.kernel_plans = plans
+        return plans
 
     def init_or_restore(self, key) -> tuple[int, dict]:
         state = steps_lib.init_train_state(self.model, self.opt_cfg, key)
@@ -54,6 +86,12 @@ class Trainer:
 
     def train(self, key, *, fail_injector: Callable[[int], None] | None = None
               ) -> list[dict]:
+        with api.plan_context(mesh=self._plan_mesh()):
+            return self._train(key, fail_injector=fail_injector)
+
+    def _train(self, key, *, fail_injector: Callable[[int], None] | None = None
+               ) -> list[dict]:
+        self.plan_hot_kernels()
         step, state = self.init_or_restore(key)
         retries = 0
         while step < self.tcfg.n_steps:

@@ -13,6 +13,13 @@ serve_step per tick; requests of ragged lengths stream through the slots:
 
 The per-slot cache index (models/blocks._cache_put) is what makes ragged
 co-residency correct: every slot attends over exactly its own prefix.
+
+Layout planning (paper SS2.3, serving form): the batcher asks the kernel
+registry for the decode/prefill plans of each admitted batch shape under
+the ambient ``plan_context`` mesh, and packs the physical slot axis (cache
+batch dim + per-tick feed) to the planned sublane tile -- so the decode
+batch the model actually sees is always whole-tile, never raggedly padded
+by XLA behind our back.
 """
 from __future__ import annotations
 
@@ -24,6 +31,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import api
 from repro.models.params import init_params
 from repro.parallel import steps as steps_lib
 
@@ -50,19 +58,71 @@ class Request:
 
 class ContinuousBatcher:
     def __init__(self, model, params, *, slots: int, max_len: int,
-                 eos_id: int | None = None, seed: int = 0):
+                 eos_id: int | None = None, seed: int = 0, mesh=None):
         self.model = model
         self.params = params
         self.slots = slots
         self.eos_id = eos_id
+        # Layout planning: the batch axis of every decode tick is the row
+        # axis of the per-token kernels, so the *physical* slot count comes
+        # from the registry's plan for the decode batch shape -- the cache
+        # (and each tick's feed) is packed to the planned sublane tile
+        # instead of the raw requested slot count.  Extra physical slots
+        # simply idle.  An explicit ``mesh`` wins; otherwise the ambient
+        # plan_context is consulted at each planning call, so both
+        # construct-inside-context and construct-then-context launchers
+        # reach the planner with their mesh (slot *geometry* is fixed at
+        # construction from the plan made here).
+        self.mesh = mesh
+        cfg = getattr(model, "cfg", None)
+        self._d_model = int(getattr(cfg, "d_model", 0))
+        self._adtype = getattr(cfg, "adtype", jnp.float32)
+        self.decode_plan = self._batch_plan(slots)
+        self.padded_slots = (
+            self.decode_plan.rows if self.decode_plan is not None else slots
+        )
+        self.plans: dict[tuple[str, int], object] = {}
         self.decode = jax.jit(steps_lib.make_decode_step(model))
         key = jax.random.PRNGKey(seed)
-        self.cache = init_params(key, model.cache_defs(slots, max_len))
+        self.cache = init_params(key,
+                                 model.cache_defs(self.padded_slots, max_len))
         self._template = jax.tree.map(jnp.copy, self.cache)
         self.slot_req: list[Request | None] = [None] * slots
         self.queue: deque[Request] = deque()
         self.ticks = 0
         self.completed: dict[int, list[int]] = {}
+
+    # ---- layout planning ---------------------------------------------------
+    def _batch_plan(self, rows: int):
+        """Registry plan for a decode/prefill batch of ``rows`` sequences:
+        the per-token norm kernel over (rows, d_model) under this batcher's
+        mesh.  Memoized by the planner, so per-admission calls are free."""
+        if not self._d_model or rows <= 0:
+            return None
+        ctx = api.current_context()
+        if self.mesh is not None:
+            ctx = ctx.evolve(mesh=self.mesh)
+        return api.plan_for("rmsnorm", (rows, self._d_model), self._adtype,
+                            ctx=ctx)
+
+    def _note_admitted_plans(self) -> None:
+        """Record the plans of the currently *admitted* batch shapes
+        (ROADMAP: serving-path planning).  Called on admission and on every
+        tick -- slots move from prefill to decode without a new admission,
+        and the memoized plan cache makes the repeat calls free.  Keyed by
+        (phase, occupied count); each value is the plan the admitted batch
+        *needs* (its ``rows`` is the smallest tile-aligned batch that could
+        serve it -- the packing signal for shrinking the physical batch),
+        while ``decode_plan`` remains the plan of the (padded_slots,
+        d_model) batch every tick actually executes."""
+        n_prefill = sum(r is not None and r.prefilling for r in self.slot_req)
+        n_decode = sum(r is not None and not r.prefilling
+                       for r in self.slot_req)
+        for phase, n in (("prefill", n_prefill), ("decode", n_decode)):
+            if n:
+                plan = self._batch_plan(n)
+                if plan is not None:
+                    self.plans[(phase, n)] = plan
 
     # ------------------------------------------------------------------
     def submit(self, reqs: Iterable[Request]) -> None:
@@ -78,23 +138,28 @@ class ContinuousBatcher:
             name = str(getattr(path[-1], "key", ""))
             if name == "idx":
                 return c.at[slot].set(0)
-            if c.ndim >= 2 and c.shape[1] == self.slots:
+            if c.ndim >= 2 and c.shape[1] == self.padded_slots:
                 return c.at[:, slot].set(t[:, slot])
-            if c.ndim >= 1 and c.shape[0] == self.slots:
+            if c.ndim >= 1 and c.shape[0] == self.padded_slots:
                 return c.at[slot].set(t[slot])
             return c
 
         return jax.tree_util.tree_map_with_path(reset, cache, self._template)
 
     def _admit(self) -> None:
+        admitted = False
         for s in range(self.slots):
             if self.slot_req[s] is None and self.queue:
                 self.slot_req[s] = self.queue.popleft()
                 self.cache = self._reset_slot(self.cache, s)
+                admitted = True
+        if admitted:
+            self._note_admitted_plans()
 
     # ------------------------------------------------------------------
     def step(self) -> None:
-        feed = np.zeros((self.slots, 1), np.int32)
+        self._note_admitted_plans()
+        feed = np.zeros((self.padded_slots, 1), np.int32)
         for s, req in enumerate(self.slot_req):
             if req is None:
                 continue

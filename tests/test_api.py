@@ -1,0 +1,448 @@
+"""Unified kernel-launch API: registry round-trips for every family,
+PlanContext nesting/override semantics, dtype-aware sublane plans, mesh
+threading to the plan cache at the serving/training call sites, and the
+deprecated per-family shims."""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import api
+from repro.core import planner
+from repro.core.autotune import StreamSignature
+from repro.core.planner import clear_plan_cache, plan_cache_keys, plan_kernel
+
+
+def rnd(shape, dtype, seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), shape, jnp.float32)
+    return x.astype(dtype)
+
+
+def one_device_mesh():
+    return jax.sharding.Mesh(
+        np.asarray(jax.devices()[:1]).reshape(1), ("model",)
+    )
+
+
+class TestRegistryRoundTrip:
+    """register -> launch -> parity vs the registered ref, all families."""
+
+    def _cases(self):
+        a = rnd((1000,), jnp.float32, 0)
+        b = rnd((1000,), jnp.float32, 1)
+        c = rnd((1000,), jnp.float32, 2)
+        g = rnd((37, 130), jnp.float32, 3)
+        x = rnd((5, 129), jnp.float32, 4)
+        z = rnd((5, 129), jnp.float32, 5)
+        s = rnd((129,), jnp.float32, 6) + 1.0
+        from repro.kernels.lbm import ops as lops
+
+        f = lops.init_equilibrium(6, jnp.float32)
+        logits = jax.random.normal(jax.random.PRNGKey(7), (67, 1111)) * 3
+        labels = jax.random.randint(jax.random.PRNGKey(8), (67,), 0, 1000)
+        return [
+            ("stream.copy", (a,), {}),
+            ("stream.scale", (a,), {"s": 2.0}),
+            ("stream.add", (a, b), {}),
+            ("stream.triad", (a, b), {"s": 3.0}),
+            ("triad", (a, b, c), {}),
+            ("jacobi", (g,), {}),
+            ("lbm.soa", (f,), {"omega": 1.2}),
+            ("lbm.ivjk", (f,), {"omega": 1.2}),
+            ("rmsnorm", (x, s), {}),
+            ("rmsnorm.gated", (x, z, s), {}),
+            ("xent", (logits, labels), {"logical_v": 1000}),
+        ]
+
+    def test_all_families_launch_and_match_ref(self):
+        for name, arrays, scalars in self._cases():
+            got = api.launch(name, *arrays, **scalars)
+            want = api.ref(name, *arrays, **scalars)
+            np.testing.assert_allclose(
+                np.asarray(got, np.float32), np.asarray(want, np.float32),
+                rtol=2e-4, atol=1e-5, err_msg=name,
+            )
+
+    def test_six_families_cover_registry(self):
+        names = api.list_kernels()
+        families = {n.split(".")[0] for n in names}
+        assert families == {"stream", "triad", "jacobi", "lbm", "rmsnorm",
+                            "xent"}
+        assert set(names) >= {
+            "stream.copy", "stream.scale", "stream.add", "stream.triad",
+            "triad", "jacobi", "lbm.soa", "lbm.ivjk",
+            "rmsnorm", "rmsnorm.gated", "xent",
+        }
+
+    def test_custom_registration_round_trip(self):
+        """A brand-new kernel registered through the decorator is launchable
+        and planned like any built-in family."""
+        from repro.kernels.util import plan_args_1d
+
+        name = "stream.test_double"
+        if name not in planner.FAMILIES:  # idempotent under pytest reruns
+            @api.register_kernel(
+                name, signature=StreamSignature(n_read=1, n_write=1),
+                ref=lambda a: a * 2.0, plan_args=plan_args_1d)
+            def _double(plan, a):
+                assert plan.kernel == name
+                return a * 2.0
+
+        x = rnd((300,), jnp.float32, 0)
+        np.testing.assert_allclose(np.asarray(api.launch(name, x)),
+                                   np.asarray(x) * 2.0)
+        assert api.plan_for(name, (300,), jnp.float32).kernel == name
+
+    def test_unknown_kernel_raises(self):
+        with pytest.raises(KeyError, match="no kernel registered"):
+            api.launch("nope.unknown", jnp.ones(8))
+
+    def test_shadow_registration_rejected(self):
+        from repro.kernels.util import plan_args_1d
+
+        with pytest.raises(ValueError, match="already registered"):
+            @api.register_kernel(
+                "triad", signature=StreamSignature(n_read=3, n_write=1),
+                ref=lambda *a: a[0], plan_args=plan_args_1d)
+            def _shadow(plan, b, c, d):
+                return b
+
+    def test_shadow_family_signature_rejected(self):
+        with pytest.raises(ValueError, match="refusing shadow"):
+            planner.register_family(
+                "triad", StreamSignature(n_read=1, n_write=1))
+
+    def test_gated_rmsnorm_operand_mismatch_rejected(self):
+        """A z (or scale) that disagrees with x must error, never be
+        silently zero-padded into wrong output rows."""
+        x = rnd((8, 256), jnp.float32, 0)
+        z = rnd((4, 256), jnp.float32, 1)
+        s = jnp.ones(256)
+        with pytest.raises(ValueError, match="must match x shape"):
+            api.launch("rmsnorm.gated", x, z, s)
+        with pytest.raises(ValueError, match="must match minor dim"):
+            api.launch("rmsnorm", x, jnp.ones(100))
+
+    def test_plan_array_mismatch_rejected(self):
+        plan = api.plan_for("stream.copy", (1000,), jnp.float32)
+        with pytest.raises(ValueError, match="is for shape"):
+            api.launch("stream.copy", jnp.ones(2000), plan=plan)
+        with pytest.raises(ValueError, match="is for dtype"):
+            api.launch("stream.copy", jnp.ones(1000, jnp.bfloat16), plan=plan)
+        with pytest.raises(ValueError, match="is for kernel"):
+            api.launch("stream.add", jnp.ones(1000), jnp.ones(1000),
+                       plan=plan)
+
+
+class TestPlanContext:
+    def test_nesting_inherits_and_overrides(self):
+        base = api.current_context()
+        assert base.mesh is None
+        with api.plan_context(mesh={"model": 4}) as c1:
+            assert api.current_context() is c1
+            assert c1.mesh == {"model": 4}
+            with api.plan_context(vmem_budget=1 << 20) as c2:
+                assert c2.mesh == {"model": 4}          # inherited
+                assert c2.vmem_budget == 1 << 20         # overridden
+                assert c1.vmem_budget != 1 << 20
+            assert api.current_context() is c1
+        assert api.current_context().mesh is None
+
+    def test_plan_overrides_merge_inner_wins(self):
+        pa = api.plan_for("triad", (64,), jnp.float32)
+        pb = api.plan_for("stream.copy", (64,), jnp.float32)
+        pa2 = api.plan_for("triad", (128,), jnp.float32)
+        with api.plan_context(plan_overrides={"triad": pa}):
+            with api.plan_context(plan_overrides={"stream.copy": pb,
+                                                  "triad": pa2}) as c2:
+                assert c2.plan_overrides["triad"] is pa2
+                assert c2.plan_overrides["stream.copy"] is pb
+            assert api.current_context().plan_overrides == {"triad": pa}
+            # explicit None clears inherited pins entirely
+            with api.plan_context(plan_overrides=None):
+                assert api.current_context().plan_overrides == {}
+
+    def test_plan_override_used_by_launch(self):
+        plan = api.plan_for("triad", (500,), jnp.float32)
+        with api.plan_context(plan_overrides={"triad": plan}):
+            assert api.plan_for("triad", (500,), jnp.float32) is plan
+            b, c, d = (rnd((500,), jnp.float32, i) for i in range(3))
+            out = api.launch("triad", b, c, d)
+            np.testing.assert_allclose(np.asarray(out),
+                                       np.asarray(api.ref("triad", b, c, d)),
+                                       rtol=1e-6, atol=1e-6)
+            # other shapes of the same kernel fall through to the planner
+            # (a pinned plan must not break the rest of the run)
+            other = api.plan_for("triad", (9999,), jnp.float32)
+            assert other is not plan
+            assert other.logical_shape == (9999,)
+            b2, c2, d2 = (rnd((600,), jnp.float32, i) for i in range(3))
+            np.testing.assert_allclose(
+                np.asarray(api.launch("triad", b2, c2, d2)),
+                np.asarray(api.ref("triad", b2, c2, d2)),
+                rtol=1e-6, atol=1e-6)
+
+    def test_evolve_rejects_unknown_fields(self):
+        with pytest.raises(TypeError, match="unknown PlanContext fields"):
+            api.current_context().evolve(vmem=1 << 20)  # typo'd kwarg
+
+    def test_lowering_kernel_plan_honors_plan_overrides(self):
+        from repro.launch import lowering
+
+        pinned = api.plan_for("rmsnorm", (64, 129), "float32")
+        with api.plan_context(plan_overrides={"rmsnorm": pinned}):
+            assert lowering.kernel_plan("rmsnorm", (64, 129),
+                                        "float32") is pinned
+
+    def test_process_default_context(self):
+        try:
+            api.set_default_context(api.PlanContext(mesh={"model": 2}))
+            assert api.current_context().mesh == {"model": 2}
+            # an explicit context still wins over the default
+            with api.plan_context(mesh=None):
+                assert api.current_context().mesh is None
+        finally:
+            api.reset_default_context()
+        assert api.current_context().mesh is None
+
+    def test_context_mesh_reaches_plan_cache_key(self):
+        clear_plan_cache()
+        mesh = one_device_mesh()
+        with api.plan_context(mesh=mesh):
+            api.plan_for("rmsnorm", (64, 129), jnp.float32)
+        keys = plan_cache_keys()
+        assert any(k[0] == "rmsnorm" and k[3] == (("model", 1),)
+                   for k in keys)
+
+
+class TestSublanePolicy:
+    """bf16 -> 16-row sublanes, fp8 -> 32; less padding paid in bytes."""
+
+    def test_dtype_native_sublanes(self):
+        assert plan_kernel("triad", (8191,), jnp.float32).sublanes == 8
+        assert plan_kernel("triad", (8191,), jnp.bfloat16).sublanes == 16
+        if hasattr(jnp, "float8_e4m3fn"):
+            p8 = plan_kernel("triad", (8191,), jnp.float8_e4m3fn)
+            assert p8.sublanes == 32
+
+    @pytest.mark.parametrize("family,shape", [
+        ("triad", (8191,)),
+        ("rmsnorm", (100, 129)),
+        ("rmsnorm", (999, 257)),
+        ("xent", (301, 1111)),
+    ])
+    def test_bf16_wastes_strictly_fewer_bytes_than_fp32(self, family, shape):
+        p32 = plan_kernel(family, shape, jnp.float32)
+        p16 = plan_kernel(family, shape, jnp.bfloat16)
+        assert p16.sublanes == 16 and p32.sublanes == 8
+        assert p16.waste_bytes < p32.waste_bytes
+        # bf16 rows land on the native (16, 128) tile
+        assert p16.rows % 16 == 0
+
+    def test_bf16_plans_stay_tileable_and_parity_holds(self):
+        from repro.kernels.stream import ref as sref
+
+        for n in (1000, 8191, 20000):
+            p = plan_kernel("stream.triad", (n,), jnp.bfloat16)
+            assert p.rows % p.sublanes == 0
+            assert p.rows % p.block_rows == 0
+            b, c = rnd((n,), jnp.bfloat16, 0), rnd((n,), jnp.bfloat16, 1)
+            np.testing.assert_allclose(
+                np.asarray(api.launch("stream.triad", b, c, s=3.0),
+                           np.float32),
+                np.asarray(sref.triad(b, c, 3.0), np.float32),
+                rtol=2e-2, atol=2e-2)
+
+    def test_context_sublane_policy_override(self):
+        ctx = api.PlanContext(sublane_policy={"bfloat16": 8})
+        assert ctx.sublanes_for(jnp.bfloat16) == 8
+        assert ctx.sublanes_for(jnp.float32) == 8
+        with api.plan_context(sublane_policy={"bfloat16": 8}):
+            p = api.plan_for("rmsnorm", (100, 129), jnp.bfloat16)
+            assert p.sublanes == 8 and p.rows == 104
+
+
+class TestCallSiteMeshThreading:
+    """A Mesh set via plan_context reaches plan_kernel at every
+    serving/training call site (spied through the plan cache key)."""
+
+    MESH_KEY = (("model", 1),)
+
+    def _tiny_model(self):
+        from repro.models import build_model
+        from repro.models.config import ModelConfig
+
+        cfg = ModelConfig(name="t", family="dense", n_layers=1, d_model=64,
+                          n_heads=2, n_kv_heads=2, d_ff=64, vocab_size=32,
+                          dtype="float32", remat=False)
+        return build_model(cfg)
+
+    def _mesh_keys_for(self, kernel):
+        return [k for k in plan_cache_keys()
+                if k[0] == kernel and k[3] == self.MESH_KEY]
+
+    def test_lowering_kernel_plan_uses_ambient_mesh(self):
+        from repro.launch import lowering
+
+        clear_plan_cache()
+        with api.plan_context(mesh=one_device_mesh()):
+            p = lowering.kernel_plan("xent", (256, 1111), "float32")
+        assert p.mesh == self.MESH_KEY
+        assert self._mesh_keys_for("xent")
+
+    def test_trainer_plans_under_its_mesh(self):
+        from repro.data.pipeline import DataConfig
+        from repro.optim import adamw
+        from repro.optim.schedules import make_schedule
+        from repro.runtime.trainer import Trainer, TrainerConfig
+
+        clear_plan_cache()
+        model = self._tiny_model()
+        tr = Trainer(
+            model,
+            DataConfig(vocab_size=32, seq_len=16, global_batch=4, d_model=64),
+            adamw.AdamWConfig(master=False),
+            make_schedule("cosine", peak=3e-3, warmup=2, total=8),
+            TrainerConfig(n_steps=2, ckpt_every=2, ckpt_dir="/tmp/t_api"),
+            mesh=one_device_mesh(),
+        )
+        plans = tr.plan_hot_kernels()
+        assert set(plans) == {"rmsnorm", "xent"}
+        assert plans["xent"].mesh == self.MESH_KEY
+        assert self._mesh_keys_for("rmsnorm") and self._mesh_keys_for("xent")
+
+    def test_trainer_inherits_ambient_plan_context_at_use_time(self):
+        """The launcher pattern: Trainer constructed *before* plan_context
+        is entered must still plan under the launcher's mesh (the mesh is
+        resolved when plans are made, not captured at __init__)."""
+        from repro.data.pipeline import DataConfig
+        from repro.optim import adamw
+        from repro.optim.schedules import make_schedule
+        from repro.runtime.trainer import Trainer, TrainerConfig
+
+        clear_plan_cache()
+        tr = Trainer(
+            self._tiny_model(),
+            DataConfig(vocab_size=32, seq_len=16, global_batch=4, d_model=64),
+            adamw.AdamWConfig(master=False),
+            make_schedule("cosine", peak=3e-3, warmup=2, total=8),
+            TrainerConfig(n_steps=2, ckpt_every=2, ckpt_dir="/tmp/t_api"),
+        )
+        with api.plan_context(mesh=one_device_mesh()):
+            plans = tr.plan_hot_kernels()
+        assert plans["xent"].mesh == self.MESH_KEY
+        assert self._mesh_keys_for("xent")
+
+    def test_jitted_drivers_replan_under_new_context(self):
+        """jacobi_sweeps/lbm_run resolve their plan *outside* jit, so a new
+        plan_context is not masked by a stale trace."""
+        from repro.kernels.jacobi import ops as jops
+
+        g = rnd((20, 20), jnp.float32, 0)
+        jops.jacobi_sweeps(g, 2)  # trace + plan under the default context
+        clear_plan_cache()
+        with api.plan_context(mesh=one_device_mesh()):
+            jops.jacobi_sweeps(g, 2)
+        assert self._mesh_keys_for("jacobi")
+
+    def test_batcher_asks_registry_under_mesh_and_packs_slots(self):
+        from repro.serving import ContinuousBatcher, Request
+
+        clear_plan_cache()
+        model = self._tiny_model()
+        b = ContinuousBatcher(model, None, slots=3, max_len=8,
+                              mesh=one_device_mesh())
+        assert b.decode_plan is not None
+        assert b.decode_plan.mesh == self.MESH_KEY
+        assert self._mesh_keys_for("rmsnorm")
+        # slots packed to the planned sublane tile
+        assert b.padded_slots == b.decode_plan.rows
+        assert b.padded_slots >= b.slots
+        assert b.padded_slots % b.decode_plan.sublanes == 0
+        # cache batch axis follows the physical slot count
+        leaf = jax.tree_util.tree_leaves(b.cache)[0]
+        assert b.padded_slots in leaf.shape
+        # admission records decode/prefill plans per batch shape
+        b.submit([Request(rid=0, prompt=[1, 2], max_new_tokens=2),
+                  Request(rid=1, prompt=[3], max_new_tokens=2)])
+        assert ("prefill", 2) in b.plans
+        assert b.plans[("prefill", 2)].mesh == self.MESH_KEY
+        # once a slot moves to decode, the next tick records the decode
+        # plan for that batch shape too (no new admission required)
+        b.slot_req[0].fed = len(b.slot_req[0].prompt)
+        b._note_admitted_plans()
+        assert ("decode", 1) in b.plans
+        assert b.plans[("decode", 1)].mesh == self.MESH_KEY
+
+    def test_batcher_constructed_before_context_plans_under_mesh(self):
+        """Construct-then-context: admitted-batch plans resolve the ambient
+        mesh at call time, not a stale None snapshot from __init__."""
+        from repro.serving import ContinuousBatcher, Request
+
+        clear_plan_cache()
+        b = ContinuousBatcher(self._tiny_model(), None, slots=2, max_len=8)
+        with api.plan_context(mesh=one_device_mesh()):
+            b.submit([Request(rid=0, prompt=[1, 2], max_new_tokens=2)])
+        assert b.plans[("prefill", 1)].mesh == self.MESH_KEY
+
+
+class TestDeprecatedShims:
+    def test_shims_importable_and_forward(self):
+        from repro.kernels.jacobi import ops as jops
+        from repro.kernels.jacobi import ref as jref
+        from repro.kernels.lbm.ops import lbm_step
+        from repro.kernels.rmsnorm.ops import gated_rmsnorm, rmsnorm
+        from repro.kernels.stream.ops import (
+            stream_add, stream_copy, stream_scale, stream_triad,
+        )
+        from repro.kernels.triad.ops import vector_triad
+        from repro.kernels.xent.ops import xent_mean
+
+        for fn, kernel in [
+            (stream_copy, "stream.copy"), (stream_scale, "stream.scale"),
+            (stream_add, "stream.add"), (stream_triad, "stream.triad"),
+            (vector_triad, "triad"), (jops.jacobi_step, "jacobi"),
+            (lbm_step, "lbm.ivjk"), (rmsnorm, "rmsnorm"),
+            (gated_rmsnorm, "rmsnorm.gated"), (xent_mean, "xent"),
+        ]:
+            assert callable(fn)
+            assert fn.__deprecated_for__ == kernel
+
+        g = rnd((20, 20), jnp.float32, 0)
+        with pytest.warns(FutureWarning, match="jacobi_step"):
+            out = jops.jacobi_step(g)
+        np.testing.assert_allclose(np.asarray(out),
+                                   np.asarray(jref.jacobi_step(g)),
+                                   rtol=1e-5, atol=1e-6)
+
+    def test_shim_equals_launch(self):
+        from repro.kernels.stream.ops import stream_triad
+
+        b, c = rnd((777,), jnp.float32, 0), rnd((777,), jnp.float32, 1)
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", FutureWarning)
+            shim = stream_triad(b, c, 3.0)
+        np.testing.assert_array_equal(
+            np.asarray(shim),
+            np.asarray(api.launch("stream.triad", b, c, s=3.0)))
+
+
+class TestExplain:
+    def test_explain_any_registered_kernel(self):
+        for name, shape, dtype in [
+            ("stream.triad", (8191,), "float32"),
+            ("lbm.ivjk", (19, 8, 8, 8), "float32"),
+            ("rmsnorm", (64, 129), "bfloat16"),
+        ]:
+            txt = api.explain(name, shape, dtype)
+            assert f"plan[{name}]" in txt
+            assert "predicted balance" in txt
+
+    def test_explain_reflects_context(self):
+        plain = api.plan_for("rmsnorm", (64, 129), "float32")
+        with api.plan_context(mesh={"model": 4}):
+            meshed = api.plan_for("rmsnorm", (64, 129), "float32")
+        assert meshed.width % (4 * 128) == 0
+        assert meshed.width > plain.width
