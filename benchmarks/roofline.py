@@ -85,24 +85,51 @@ PLAN_CASES = [
 ]
 
 
-def planner_rows() -> list[tuple[str, float, str]]:
+def _validation_by_kernel(path: str = "results/validation.json") -> dict:
+    """Measured records from ``repro.measure.validate`` keyed by kernel
+    (empty when the validation harness has not been run)."""
+    if not os.path.exists(path):
+        return {}
+    with open(path) as f:
+        doc = json.load(f)
+    if doc.get("format") != "repro.validation":
+        return {}
+    return {r["kernel"]: r for r in doc.get("records", [])}
+
+
+def planner_rows(validation_path: str = "results/validation.json"
+                 ) -> list[tuple[str, float, str]]:
     """The planner's analytic predictions per kernel family: channel balance
-    under the planned skews vs the naive layout, and the padding waste the
-    plan pays for whole-tile DMAs.  No dry-run needed -- this is the 'no
-    trial and error' table.  Plans resolve through ``repro.api`` so the rows
-    reflect the ambient PlanContext (mesh, dtype sublane policy)."""
+    under the planned skews vs the naive layout, the padding waste the plan
+    pays for whole-tile DMAs, and the predicted HBM traffic.  Plans resolve
+    through ``repro.api`` so the rows reflect the ambient PlanContext.
+
+    When ``repro.measure.validate`` has been run, each row also carries the
+    *measured* compiled bytes and the measured/predicted ratio for that
+    kernel's validation cell -- the paper's Fig. 4 envelope next to the
+    analytic number instead of an asserted-correct table."""
     from repro import api
 
+    measured = _validation_by_kernel(validation_path)
     out = []
     for kernel, shape, dtype in PLAN_CASES:
         p = api.plan_for(kernel, shape, dtype)
-        out.append((
-            f"plan.{kernel}",
-            0.0,
+        info = (
             f"balance={p.predicted_balance:.2f};naive={p.naive_balance:.2f};"
             f"waste={p.waste:.4f};sublanes={p.sublanes};"
-            f"block={'x'.join(str(b) for b in p.block_shape)}",
-        ))
+            f"block={'x'.join(str(b) for b in p.block_shape)};"
+            f"pred_bytes={p.predicted_hbm_bytes}"
+        )
+        rec = measured.get(kernel)
+        if rec is None:
+            info += ";measured=none(run repro.measure.validate)"
+        else:
+            info += (
+                f";measured={rec['measured']['bytes']:.3e}"
+                f"@{tuple(rec['shape'])};ratio={rec['ratio']:.2f};"
+                f"envelope={rec['status']}"
+            )
+        out.append((f"plan.{kernel}", 0.0, info))
     return out
 
 

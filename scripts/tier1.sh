@@ -9,5 +9,9 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 # Stage 1: API smoke -- every kernel family registered, plannable,
 # explainable (fails fast on unregistered/shadowed names).
 python scripts/api_smoke.py
-# Stage 2: fast test matrix.
-exec python -m pytest -q -m "not slow" "$@"
+# Stage 2: measure smoke -- one family validated end-to-end (plan ->
+# compile -> HLO bytes vs predicted traffic) in a few seconds.
+python -m repro.measure.validate --family stream --out /tmp/tier1_validation.json
+# Stage 3: fast test matrix (full sweeps carry the `sweep` marker and run
+# out-of-band: pytest -m sweep).
+exec python -m pytest -q -m "not slow and not sweep" "$@"

@@ -60,6 +60,10 @@ class PlanContext:
         at the pinned plan's exact logical shape and dtype uses it instead
         of consulting the planner; launches at any other shape fall through
         to the planner (one kernel serves many shapes in a real run).
+        Keys may also be ``(kernel, shape, dtype)`` cells, which is what a
+        swept profile (``repro.measure.profile.load_profile``) produces so
+        one kernel can carry measured plans for many shapes; cell keys win
+        over bare kernel names.
     """
 
     mesh: Any = None
@@ -75,6 +79,19 @@ class PlanContext:
         dt = np.dtype(dtype)
         override = self.sublane_policy.get(dt.name)
         return sublanes_for_dtype(dt) if override is None else int(override)
+
+    @staticmethod
+    def from_profile(path: str, *, strict: bool = True,
+                     **fields) -> "PlanContext":
+        """A context whose ``plan_overrides`` come from a measured profile
+        file (``repro.measure.sweep`` output).  Every loaded plan carries
+        ``provenance="profile:<path>"`` so ``explain()`` reports where the
+        layout decision actually came from.  Extra ``fields`` (mesh, ...)
+        pass through to the ``PlanContext`` constructor."""
+        from repro.measure.profile import load_profile  # lazy: no cycle
+
+        return PlanContext(plan_overrides=load_profile(path, strict=strict),
+                           **fields)
 
     def evolve(self, **changes) -> "PlanContext":
         """Derived context: fields passed as ``_UNSET`` keep this context's

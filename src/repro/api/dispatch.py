@@ -32,7 +32,14 @@ def plan_for(kernel: str, shape, dtype, *, ctx=None) -> KernelPlan:
     registered -- unknown names fail here, not at launch time."""
     entry = registry_lib.resolve(kernel)
     ctx = ctx or context_lib.current_context()
-    override = ctx.plan_overrides.get(entry.name)
+    # Overrides are keyed two ways: a bare kernel name pins one plan for
+    # that kernel (the PR-2 escape hatch), while a (kernel, shape, dtype)
+    # cell key -- what ``repro.measure.profile.load_profile`` emits -- lets a
+    # swept profile carry many shapes of the same kernel.  The cell key wins.
+    cell = (entry.name, tuple(int(s) for s in shape), np.dtype(dtype).name)
+    override = ctx.plan_overrides.get(cell)
+    if override is None:
+        override = ctx.plan_overrides.get(entry.name)
     if override is not None and _matches(entry, override, shape, dtype):
         # A pinned plan applies only to the exact case it was built for;
         # the same kernel launched at any other shape/dtype falls through

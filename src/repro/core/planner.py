@@ -31,7 +31,7 @@ from __future__ import annotations
 
 import dataclasses
 import threading
-from typing import Mapping
+from typing import Callable, Mapping
 
 import numpy as np
 
@@ -95,6 +95,32 @@ VMEM_BUFFERS: dict[str, int] = {"jacobi": 4}
 # other 2-D kernels stream full-width row blocks, so their row budget must
 # be charged against the whole padded width.
 COL_TILED = {"xent"}
+
+# ---------------------------------------------------------------------------
+# Traffic accounting (measured-vs-predicted validation, paper Fig. 4)
+# ---------------------------------------------------------------------------
+# How many of a family's streams move a *full planned array* each launch.
+# The balance model above treats every stream as equal-weight when scoring
+# channel conflicts; traffic prediction must not -- jacobi's three shifted
+# row views stream each source row from HBM once, the LBM lattice already
+# contains all 19 direction rows, and rmsnorm/xent carry small side operands.
+# Families absent here move one full array per signature stream.
+MAJOR_STREAMS: dict[str, int] = {
+    "jacobi": 2,         # grid in + grid out; shifted views hit cached rows
+    "lbm.soa": 2,        # lattice read + written once (19+19 direction rows)
+    "lbm.ivjk": 2,
+    "rmsnorm": 2,        # x in + y out; scale is a width-sized minor stream
+    "rmsnorm.gated": 3,  # x, z in + y out
+    "xent": 1,           # logits; labels and per-token nll are row-sized
+}
+
+# Minor side-operand bytes per launch: (rows, width, elem_bytes) -> bytes.
+# labels are int32 and nll is fp32 regardless of the logits dtype.
+MINOR_STREAM_BYTES: dict[str, Callable[[int, int, int], int]] = {
+    "rmsnorm": lambda rows, width, eb: width * eb,
+    "rmsnorm.gated": lambda rows, width, eb: width * eb,
+    "xent": lambda rows, width, eb: rows * 4 + rows * 4,
+}
 
 
 def register_family(
@@ -163,6 +189,12 @@ class KernelPlan:
     naive_balance: float
     mesh: tuple[tuple[str, int], ...] = ()
     sublanes: int = SUBLANES
+    # Where this plan came from: "analytic" (the planner's closed form) or a
+    # measured source such as "sweep" / "profile:<path>" (see repro.measure).
+    # Excluded from eq/hash: plans are jit-static arguments, and a
+    # profile-loaded plan with analytic-identical geometry must share the
+    # compiled executable, not force a recompile over a label.
+    provenance: str = dataclasses.field(default="analytic", compare=False)
 
     # ---- geometry --------------------------------------------------------
     @property
@@ -226,6 +258,33 @@ class KernelPlan:
     def predicted_balance(self) -> float:
         return self.layout.predicted_balance
 
+    # ---- predicted traffic ----------------------------------------------
+    def _traffic_bytes(self, elems: int, shape: tuple[int, ...]) -> int:
+        major = MAJOR_STREAMS.get(self.kernel, self.signature.n_streams)
+        total = major * elems * self.elem_bytes
+        minor = MINOR_STREAM_BYTES.get(self.kernel)
+        if minor is not None:
+            total += minor(int(shape[0]), int(shape[-1]), self.elem_bytes)
+        return total
+
+    @property
+    def predicted_hbm_bytes(self) -> int:
+        """Analytic HBM traffic per launch at the planned *physical*
+        footprint: every major stream moves one padded array, plus the
+        family's minor side operands.  This is the number the conflict model
+        scores -- what ``repro.measure.validate`` checks against compiled
+        HLO bytes-accessed (the paper's measured-vs-predicted envelope)."""
+        return self._traffic_bytes(self.padded_elems, self.padded_shape)
+
+    @property
+    def predicted_logical_bytes(self) -> int:
+        """Lower bound on the same traffic: the streams at their *logical*
+        footprint (what a perfect compiler with no padding would move).
+        ``predicted_hbm_bytes - predicted_logical_bytes`` is the traffic the
+        plan pays for whole-tile DMAs -- the per-launch cost of
+        ``waste_bytes``."""
+        return self._traffic_bytes(self.logical_elems, self.logical_shape)
+
     def explain(self) -> str:
         """Human-readable report: predicted balance, waste, block geometry."""
         sig = self.signature
@@ -242,7 +301,11 @@ class KernelPlan:
             f"  predicted balance {self.predicted_balance:.2f}"
             f" (naive {self.naive_balance:.2f}),"
             f" waste {self.waste:.1%}"
-            f" ({self.padded_elems - self.logical_elems} pad elems)"
+            f" ({self.padded_elems - self.logical_elems} pad elems)\n"
+            f"  predicted traffic {self.predicted_hbm_bytes}B"
+            f" (logical {self.predicted_logical_bytes}B)"
+            + ("" if self.provenance == "analytic"
+               else f"\n  source: {self.provenance}")
         )
 
 
@@ -363,7 +426,7 @@ def _plan_uncached(kernel: str, shape: tuple[int, ...], dt: np.dtype,
         )
     layout = _plan_layout(sig, model)
     naive = _naive_balance(sig, model)
-    return KernelPlan(
+    plan = KernelPlan(
         kernel=kernel,
         logical_shape=shape,
         dtype=dt.name,
@@ -375,6 +438,25 @@ def _plan_uncached(kernel: str, shape: tuple[int, ...], dt: np.dtype,
         mesh=mesh_key,
         sublanes=sublanes,
     )
+    # Narrow-dtype waste guarantee: a bf16/fp8 plan must never pay more
+    # padding *bytes* than the fp32 plan of the same logical shape.  The
+    # native wide-sublane tile usually pads fewer bytes (more pad elements
+    # at half/quarter price), but its taller row tile can lose badly when
+    # `_fit_block` rounds the row count up a whole block.  The fp32 plan's
+    # geometry is always legal at a narrower dtype (rows stay
+    # 8-sublane-tileable, blocks shrink under the same VMEM budget), and
+    # costs exactly itemsize/4 of the fp32 padding bytes -- so take the
+    # cheaper of the two, still in closed form.  Explicit sublane overrides
+    # (context sublane_policy) are honored untouched.
+    if dt.itemsize < 4 and sublanes == sublanes_for_dtype(dt):
+        f32 = plan_kernel(kernel, shape, np.float32, mesh=mesh_key,
+                          model=model, vmem_budget=budget)
+        if plan.waste_bytes * 4 > f32.waste_bytes * dt.itemsize:
+            plan = dataclasses.replace(
+                plan, padded_shape=f32.padded_shape,
+                block_shape=f32.block_shape, sublanes=f32.sublanes,
+            )
+    return plan
 
 
 def _plan_layout(sig: StreamSignature, model: InterleavedMemoryModel) -> LayoutPlan:

@@ -359,6 +359,16 @@ def memory_stats(compiled) -> dict[str, float]:
 
 
 def cost_stats(compiled) -> dict[str, float]:
+    """flops / aggregate bytes-accessed from ``cost_analysis()``.
+
+    ``bytes`` is XLA's aggregate over every HLO op (fusion operands +
+    results; intermediates included), the number the roofline terms divide
+    by HBM bandwidth and that ``repro.measure.validate`` checks against
+    ``KernelPlan.predicted_hbm_bytes``.  Two caveats shared with the
+    roofline harness: loop bodies are counted once (so block-grid loops
+    undercount by the trip count), and the per-operand ``bytes accessedN{}``
+    keys aggregate across *all* instructions, not the entry boundary --
+    don't mistake them for argument traffic."""
     ca = compiled.cost_analysis()
     if isinstance(ca, (list, tuple)):
         ca = ca[0]

@@ -18,6 +18,9 @@ def main() -> None:
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen", type=int, default=24)
+    ap.add_argument("--plan-profile", default=None,
+                    help="measured plan profile (repro.measure.sweep output);"
+                         " its swept cells override the analytic planner")
     args = ap.parse_args()
 
     import jax
@@ -39,8 +42,18 @@ def main() -> None:
         cfg, _ = cfg.padded_for_mesh(16)
 
     # Ambient PlanContext: the decode path's kernels (and the plan report
-    # below) all see the serving mesh without per-call plumbing.
-    with api.plan_context(mesh=mesh):
+    # below) all see the serving mesh -- and any measured profile cells --
+    # without per-call plumbing.
+    # No --plan-profile leaves plan_overrides unspecified: an explicit None
+    # would *clear* pins inherited from the process-default context.
+    ctx_kw = {}
+    if args.plan_profile:
+        from repro.measure.profile import load_profile
+
+        ctx_kw["plan_overrides"] = load_profile(args.plan_profile)
+        print(f"plan profile {args.plan_profile}: "
+              f"{len(ctx_kw['plan_overrides'])} swept cell(s)")
+    with api.plan_context(mesh=mesh, **ctx_kw):
         model = build_model(cfg)
         params = model.init(jax.random.PRNGKey(0))
         max_len = args.prompt_len + args.gen

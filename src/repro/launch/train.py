@@ -29,6 +29,9 @@ def main() -> None:
     ap.add_argument("--ckpt-dir", default="/tmp/repro_launch_train")
     ap.add_argument("--baseline", action="store_true",
                     help="skip the layout policy (paper-raw dims)")
+    ap.add_argument("--plan-profile", default=None,
+                    help="measured plan profile (repro.measure.sweep output);"
+                         " its swept cells override the analytic planner")
     args = ap.parse_args()
     logging.basicConfig(level=logging.INFO,
                         format="%(asctime)s %(name)s %(message)s")
@@ -86,9 +89,19 @@ def main() -> None:
     )
     # One ambient PlanContext for the whole run: every kernel launched by a
     # train step now plans against the production mesh (shard-aligned
-    # physical shapes) without any per-call plumbing.
+    # physical shapes) without any per-call plumbing.  A measured profile
+    # (repro.measure.sweep) overrides the analytic choice cell by cell.
     plan_mesh = mesh if tp > 1 else None
-    with api.plan_context(mesh=plan_mesh), \
+    # No --plan-profile leaves plan_overrides unspecified: an explicit None
+    # would *clear* pins inherited from the process-default context.
+    ctx_kw = {}
+    if args.plan_profile:
+        from repro.measure.profile import load_profile
+
+        ctx_kw["plan_overrides"] = load_profile(args.plan_profile)
+        logging.info("plan profile %s: %d swept cell(s)",
+                     args.plan_profile, len(ctx_kw["plan_overrides"]))
+    with api.plan_context(mesh=plan_mesh, **ctx_kw), \
             rules_lib.use_rules(rules, mesh=plan_mesh):
         metrics = trainer.train(jax.random.PRNGKey(0))
     print(f"done: {len(metrics)} steps, "

@@ -1,0 +1,31 @@
+"""Measured-vs-predicted validation for the analytic layout planner.
+
+The paper derives padding/skew parameters analytically ("no trial and
+error is required", SS2.3) -- but *validates* the claim by measuring real
+bandwidth against the channel-conflict model (the Fig. 4 envelope).  This
+package is that loop for the TPU port:
+
+  * ``validate`` -- lower every registry kernel at its planned block shape,
+    extract HLO bytes-accessed/FLOPs from ``cost_analysis()``, and check
+    them against ``KernelPlan.predicted_hbm_bytes`` within per-family
+    tolerance envelopes (``results/validation.json``).
+  * ``sweep`` -- sweep sublane tiles / VMEM budgets per (kernel, shape,
+    dtype) cell around the analytic choice, score candidates by compiled
+    bytes (and wall time on a real backend), emit a profile.
+  * ``profile`` -- the versioned profile format plus ``load_profile`` /
+    ``save_profile``, so ``PlanContext(plan_overrides=load_profile(path))``
+    replays a measured sweep in any launcher.
+"""
+from repro.measure.profile import (
+    PROFILE_FORMAT,
+    PROFILE_VERSION,
+    entry_from_plan,
+    load_profile,
+    profile_key,
+    save_profile,
+)
+
+__all__ = [
+    "PROFILE_FORMAT", "PROFILE_VERSION",
+    "entry_from_plan", "load_profile", "profile_key", "save_profile",
+]

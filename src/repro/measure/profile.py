@@ -1,0 +1,135 @@
+"""Plan-override profiles: the serialized form of a measured sweep.
+
+A profile is versioned JSON keyed the way the planner memoizes
+(``plan_cache_keys``): each entry names a (kernel, logical shape, dtype,
+mesh) cell plus the planner *knobs* (sublane tile, VMEM budget) that won
+the sweep.  Loading re-derives the plan through ``plan_kernel`` with those
+knobs -- the profile stores decisions, not serialized plan objects -- and
+cross-checks the derived geometry against the recorded ``expect`` block:
+if the planner has drifted since the sweep ran, the mismatch is a loud,
+readable error instead of a silently different layout.
+
+    {
+      "format": "repro.plan_profile", "version": 1, "backend": "cpu",
+      "entries": [
+        {"kernel": "rmsnorm", "logical_shape": [1016, 1111],
+         "dtype": "float32", "mesh": [],
+         "knobs": {"sublanes": 8, "vmem_budget": 262144},
+         "expect": {"padded_shape": [1016, 1152], "block_shape": [8, 1152]},
+         "score": {"hlo_bytes": 41913528.0, "wall_s": null},
+         "source": "sweep"}
+      ]
+    }
+
+``load_profile`` returns ``{(kernel, shape, dtype): KernelPlan}`` -- the
+cell-keyed mapping ``PlanContext(plan_overrides=...)`` consumes -- with
+every plan's ``provenance`` set to ``profile:<path>`` so ``explain()``
+reports where the layout decision actually came from.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import warnings
+
+from repro.core.planner import KernelPlan, plan_kernel
+
+PROFILE_FORMAT = "repro.plan_profile"
+PROFILE_VERSION = 1
+
+
+def profile_key(kernel: str, shape, dtype) -> tuple:
+    """The override-mapping key for one profiled cell."""
+    import numpy as np
+
+    return (kernel, tuple(int(s) for s in shape), np.dtype(dtype).name)
+
+
+def entry_from_plan(plan: KernelPlan, knobs: dict, *, score: dict | None = None,
+                    source: str = "sweep") -> dict:
+    """Serialize one swept plan: the knobs that produced it plus the
+    geometry it must reproduce on load."""
+    missing = {"sublanes", "vmem_budget"} - set(knobs)
+    if missing:
+        raise ValueError(f"profile knobs missing {sorted(missing)}")
+    return {
+        "kernel": plan.kernel,
+        "logical_shape": list(plan.logical_shape),
+        "dtype": plan.dtype,
+        "mesh": [list(kv) for kv in plan.mesh],
+        "knobs": {"sublanes": int(knobs["sublanes"]),
+                  "vmem_budget": int(knobs["vmem_budget"])},
+        "expect": {"padded_shape": list(plan.padded_shape),
+                   "block_shape": list(plan.block_shape)},
+        "score": dict(score or {}),
+        "source": source,
+    }
+
+
+def save_profile(path: str, entries: list[dict], *, backend: str | None = None,
+                 meta: dict | None = None) -> None:
+    """Write a versioned profile; parent directories are created."""
+    doc = {
+        "format": PROFILE_FORMAT,
+        "version": PROFILE_VERSION,
+        "backend": backend,
+        "meta": dict(meta or {}),
+        "entries": list(entries),
+    }
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1)
+
+
+def load_profile(path: str, *, strict: bool = True) -> dict:
+    """Profile file -> ``{(kernel, shape, dtype): KernelPlan}``.
+
+    Each entry's plan is re-derived via ``plan_kernel`` under the recorded
+    knobs and mesh, then checked against the recorded geometry.  A drifted
+    entry raises (``strict=True``) or is skipped with a warning, so a stale
+    profile can never silently impose a layout the sweep did not measure.
+    """
+    with open(path) as f:
+        doc = json.load(f)
+    if doc.get("format") != PROFILE_FORMAT:
+        raise ValueError(
+            f"{path}: not a plan profile (format={doc.get('format')!r})"
+        )
+    if int(doc.get("version", 0)) > PROFILE_VERSION:
+        raise ValueError(
+            f"{path}: profile version {doc.get('version')} is newer than "
+            f"supported {PROFILE_VERSION}"
+        )
+    overrides: dict = {}
+    for entry in doc.get("entries", ()):
+        kernel = entry["kernel"]
+        shape = tuple(int(s) for s in entry["logical_shape"])
+        dtype = entry["dtype"]
+        knobs = entry["knobs"]
+        mesh = tuple((str(a), int(n)) for a, n in entry.get("mesh", ())) or None
+        plan = plan_kernel(
+            kernel, shape, dtype, mesh=mesh,
+            sublanes=int(knobs["sublanes"]),
+            vmem_budget=int(knobs["vmem_budget"]),
+        )
+        expect = entry.get("expect", {})
+        derived = {"padded_shape": list(plan.padded_shape),
+                   "block_shape": list(plan.block_shape)}
+        drift = {k: (expect[k], derived[k]) for k in expect
+                 if expect[k] != derived[k]}
+        if drift:
+            msg = (
+                f"{path}: profiled cell {kernel} {shape} {dtype} no longer "
+                f"reproduces its swept geometry (planner drift): "
+                + "; ".join(f"{k}: profiled {a} != derived {b}"
+                            for k, (a, b) in drift.items())
+            )
+            if strict:
+                raise ValueError(msg)
+            warnings.warn(msg + " -- entry skipped", stacklevel=2)
+            continue
+        overrides[profile_key(kernel, shape, dtype)] = dataclasses.replace(
+            plan, provenance=f"profile:{path}"
+        )
+    return overrides

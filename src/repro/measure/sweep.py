@@ -1,0 +1,179 @@
+"""Block-shape sweeps around the analytic plan, emitting a loadable profile.
+
+The planner's closed form is the default; this harness is the escape hatch
+the ROADMAP calls "autotuned plan_overrides": per (kernel, shape, dtype)
+cell it varies the planner's two measurable knobs -- the sublane tile and
+the VMEM budget handed to the block chooser -- compiles each distinct
+resulting plan, and scores candidates by compiled HLO bytes (and wall time
+when a real backend is present / ``--time`` is passed).  The winner is
+serialized via ``repro.measure.profile`` so
+``PlanContext(plan_overrides=load_profile(path))`` replays the measured
+choice in any launcher.
+
+Sweeping *knobs* rather than raw block tuples keeps every candidate a plan
+the planner itself would produce (padded/block geometry always mutually
+consistent), and makes the profile replayable: the file records the knobs,
+loading re-derives the plan and cross-checks the geometry.
+
+Usage:
+    python -m repro.measure.sweep --cell rmsnorm:1016,1111:float32
+    python -m repro.measure.sweep --all --out results/profile.json
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+import jax
+
+from repro import api
+from repro.core.planner import plan_kernel
+from repro.measure import profile as profile_lib
+from repro.measure import validate as validate_lib
+
+PROFILE_OUT_DEFAULT = "results/profile.json"
+
+SUBLANE_CANDIDATES = (8, 16, 32)
+# Budget dividers: 1 is the analytic default; larger dividers shrink the
+# block, which can *reduce* padding for awkward row counts (a row count
+# with no block-sized divisor is rounded up a whole block by `_fit_block`).
+BUDGET_DIVIDERS = (1, 4, 16, 64)
+
+
+@dataclasses.dataclass(frozen=True)
+class Candidate:
+    knobs: dict
+    plan: object
+    measured: dict
+
+    @property
+    def score(self) -> tuple:
+        wall = self.measured.get("wall_s")
+        return (
+            wall if wall is not None else float("inf"),
+            self.measured["bytes"],
+            self.plan.predicted_hbm_bytes,
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepResult:
+    kernel: str
+    shape: tuple
+    dtype: str
+    default_plan: object
+    candidates: tuple
+    best: Candidate
+
+    @property
+    def changed(self) -> bool:
+        """Did measurement override the analytic choice?"""
+        d, b = self.default_plan, self.best.plan
+        return (d.padded_shape, d.block_shape) != (b.padded_shape,
+                                                   b.block_shape)
+
+    def entry(self) -> dict:
+        return profile_lib.entry_from_plan(
+            self.best.plan, self.best.knobs,
+            score={"hlo_bytes": self.best.measured["bytes"],
+                   "flops": self.best.measured["flops"],
+                   "wall_s": self.best.measured["wall_s"],
+                   "changed": self.changed},
+        )
+
+
+def candidate_knobs(dtype, ctx=None) -> list[dict]:
+    """Knob grid centred on the ambient context's analytic choice."""
+    ctx = ctx or api.current_context()
+    base_sub = ctx.sublanes_for(dtype)
+    budget = ctx.vmem_budget
+    subs = sorted({base_sub, *SUBLANE_CANDIDATES})
+    return [
+        {"sublanes": s, "vmem_budget": max(budget // d, 1)}
+        for s in subs for d in BUDGET_DIVIDERS
+    ]
+
+
+def sweep_cell(kernel: str, shape, dtype, *, ctx=None,
+               timed: bool = False) -> SweepResult:
+    """Measure every distinct candidate plan for one cell."""
+    ctx = ctx or api.current_context()
+    shape = tuple(int(s) for s in shape)
+    default_plan = api.plan_for(kernel, shape, dtype, ctx=ctx)
+    seen: dict[tuple, Candidate] = {}
+    for knobs in candidate_knobs(dtype, ctx):
+        plan = plan_kernel(kernel, shape, dtype, mesh=ctx.mesh,
+                           model=ctx.model, **knobs)
+        geom = (plan.padded_shape, plan.block_shape)
+        if geom in seen:
+            continue
+        measured = validate_lib.measure_cell(kernel, shape, dtype, plan=plan,
+                                             timed=timed)
+        seen[geom] = Candidate(knobs=knobs, plan=plan, measured=measured)
+    candidates = tuple(seen.values())
+    best = min(candidates, key=lambda c: c.score)
+    best = dataclasses.replace(
+        best, plan=dataclasses.replace(best.plan, provenance="sweep"))
+    return SweepResult(kernel=kernel, shape=shape,
+                       dtype=str(jax.numpy.dtype(dtype).name),
+                       default_plan=default_plan, candidates=candidates,
+                       best=best)
+
+
+def sweep_cells(cells, *, timed: bool = False) -> list[SweepResult]:
+    return [sweep_cell(k, s, d, timed=timed) for k, s, d in cells]
+
+
+def _parse_cell(spec: str) -> tuple[str, tuple[int, ...], str]:
+    """'kernel:r,c:dtype' -> (kernel, (r, c), dtype)."""
+    try:
+        kernel, shape_s, dtype = spec.split(":")
+        shape = tuple(int(x) for x in shape_s.split(",") if x)
+    except ValueError as e:
+        raise SystemExit(f"bad --cell {spec!r} (want kernel:dims:dtype): {e}")
+    return kernel, shape, dtype
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="sweep block-shape knobs per cell, emit a plan profile")
+    ap.add_argument("--cell", action="append", default=[],
+                    help="kernel:dims:dtype, e.g. rmsnorm:1016,1111:float32")
+    ap.add_argument("--all", action="store_true",
+                    help="sweep every validate.CASES cell")
+    ap.add_argument("--time", action="store_true",
+                    help="also execute and score by wall time "
+                         "(default on non-CPU backends)")
+    ap.add_argument("--out", default=PROFILE_OUT_DEFAULT)
+    args = ap.parse_args(argv)
+
+    cells = [_parse_cell(c) for c in args.cell]
+    if args.all:
+        cells += [(k, shape, dtype)
+                  for k, (shape, dtype) in validate_lib.CASES.items()]
+    if not cells:
+        ap.error("pass --cell or --all")
+    timed = args.time or jax.default_backend() != "cpu"
+
+    results = sweep_cells(cells, timed=timed)
+    for r in results:
+        mark = "SWEPT" if r.changed else "kept "
+        print(f"[{mark}] {r.kernel:14s} {r.shape} {r.dtype}: "
+              f"{len(r.candidates)} candidates, best "
+              f"padded={r.best.plan.padded_shape} "
+              f"block={r.best.plan.block_shape} "
+              f"bytes={r.best.measured['bytes']:.3e} "
+              f"(analytic padded={r.default_plan.padded_shape})")
+    profile_lib.save_profile(
+        args.out, [r.entry() for r in results],
+        backend=jax.default_backend(),
+        meta={"timed": timed, "jax": jax.__version__},
+    )
+    n_changed = sum(r.changed for r in results)
+    print(f"wrote {len(results)} cells -> {args.out} "
+          f"({n_changed} differ from the analytic choice)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -8,6 +8,7 @@ regardless of the activation dtype.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Any
 
 import jax
@@ -29,6 +30,51 @@ def norm_defs(cfg: ModelConfig, d: int | None = None) -> dict:
     return out
 
 
+def use_fused_kernels() -> bool:
+    """Whether model hot paths route through ``repro.api.launch``.
+
+    Single-device programs launch the registered Pallas kernels, so the
+    ambient ``PlanContext`` (mesh, sublane policy, swept ``plan_overrides``)
+    governs the model forward pass too.  Multi-device SPMD lowering keeps
+    the pure-jnp path: a ``pallas_call`` carries no partitioning rule, and
+    the Megatron-style loss must stay vocab-parallel.  Device count is
+    fixed per process, so every trace in one program picks one path."""
+    return jax.device_count() == 1
+
+
+def _rms_ref(x: jax.Array, scale: jax.Array, eps: float) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    ms = (xf * xf).mean(-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + eps) * scale.astype(jnp.float32)).astype(
+        x.dtype)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def _rms_fused(x: jax.Array, scale: jax.Array, eps: float) -> jax.Array:
+    """RMSNorm via the registry kernel, differentiable: the forward pass is
+    the planned Pallas launch (so plans, profiles, and the mesh policy all
+    apply), the backward pass is the vjp of the identical jnp math --
+    Pallas bodies define no autodiff rule."""
+    from repro.api import dispatch
+
+    return dispatch.launch("rmsnorm", x, scale, eps=eps)
+
+
+def _rms_fused_fwd(x, scale, eps):
+    from repro.api import dispatch
+
+    return dispatch.launch("rmsnorm", x, scale, eps=eps), (x, scale)
+
+
+def _rms_fused_bwd(eps, res, g):
+    x, scale = res
+    _, vjp = jax.vjp(lambda xx, ss: _rms_ref(xx, ss, eps), x, scale)
+    return vjp(g)
+
+
+_rms_fused.defvjp(_rms_fused_fwd, _rms_fused_bwd)
+
+
 def apply_norm(p: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
     xf = x.astype(jnp.float32)
     if cfg.norm == "layernorm":
@@ -37,6 +83,8 @@ def apply_norm(p: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
         y = (xf - mu) * jax.lax.rsqrt(var + cfg.norm_eps)
         y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
     else:
+        if use_fused_kernels():
+            return _rms_fused(x, p["scale"], cfg.norm_eps)
         ms = (xf * xf).mean(-1, keepdims=True)
         y = xf * jax.lax.rsqrt(ms + cfg.norm_eps) * p["scale"].astype(jnp.float32)
     return y.astype(x.dtype)

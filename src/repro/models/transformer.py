@@ -18,6 +18,7 @@ from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.models import blocks, mamba2, moe, xlstm
 from repro.models.config import ModelConfig
@@ -219,6 +220,51 @@ def forward(params: Tree, tokens: jax.Array, cfg: ModelConfig,
     return logits, aux_total
 
 
+def _xent_ref(logits: jax.Array, labels: jax.Array, logical_v: int
+              ) -> jax.Array:
+    """Mean NLL over rows, the jnp math the xent kernel fuses (padded vocab
+    columns masked with an elementwise iota, label logit extracted by a
+    fused iota==label reduction)."""
+    lf = logits.astype(jnp.float32)
+    viota = jax.lax.broadcasted_iota(jnp.int32, lf.shape, lf.ndim - 1)
+    if logical_v < lf.shape[-1]:
+        lf = lf + jnp.where(viota >= logical_v, -1e30, 0.0)
+    m = jnp.max(lf, axis=-1, keepdims=True)
+    lse = jnp.log(jnp.sum(jnp.exp(lf - m), axis=-1)) + m[..., 0]
+    label_logit = jnp.sum(
+        jnp.where(viota == labels[..., None], lf, 0.0), axis=-1
+    )
+    return (lse - label_logit).mean()
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def _xent_fused(logits: jax.Array, labels: jax.Array,
+                logical_v: int) -> jax.Array:
+    """Cross-entropy via the registry kernel (tiled online softmax), with
+    the jnp vjp for the backward pass -- Pallas bodies define no autodiff
+    rule, and the gradient (softmax - onehot) is cheap in jnp."""
+    from repro.api import dispatch
+
+    return dispatch.launch("xent", logits, labels, logical_v=logical_v)
+
+
+def _xent_fused_fwd(logits, labels, logical_v):
+    from repro.api import dispatch
+
+    out = dispatch.launch("xent", logits, labels, logical_v=logical_v)
+    return out, (logits, labels)
+
+
+def _xent_fused_bwd(logical_v, res, g):
+    logits, labels = res
+    _, vjp = jax.vjp(lambda l: _xent_ref(l, labels, logical_v), logits)
+    (d_logits,) = vjp(g)
+    return d_logits, np.zeros(labels.shape, jax.dtypes.float0)
+
+
+_xent_fused.defvjp(_xent_fused_fwd, _xent_fused_bwd)
+
+
 def lm_loss(logits: jax.Array, labels: jax.Array, cfg: ModelConfig,
             mask: jax.Array | None = None) -> jax.Array:
     """Vocab-parallel mean CE.
@@ -230,9 +276,19 @@ def lm_loss(logits: jax.Array, labels: jax.Array, cfg: ModelConfig,
     only (B, S) statistics cross shards.  Materializing full per-device
     logits for a 152k vocab would cost ~40 GB/device -- this is the layout
     policy applied to the loss.
+
+    On a single device the unmasked case launches the registered ``xent``
+    Pallas kernel through ``repro.api`` (tiled online softmax under the
+    ambient plan policy; ``Trainer.plan_hot_kernels`` pins its plan).  The
+    masked and multi-device SPMD cases keep the jnp path -- a masked mean
+    cannot be recovered from the kernel's all-token mean, and the sharded
+    loss must stay vocab-parallel (see ``blocks.use_fused_kernels``).
     """
     v = logits.shape[-1]
     logical = getattr(cfg, "vocab_logical", 0) or cfg.vocab_size
+    if mask is None and blocks.use_fused_kernels():
+        return _xent_fused(logits.reshape(-1, v),
+                           labels.reshape(-1).astype(jnp.int32), logical)
     lf = logits.astype(jnp.float32)
     viota = jax.lax.broadcasted_iota(jnp.int32, lf.shape, lf.ndim - 1)
     if logical < v:

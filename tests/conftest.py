@@ -3,5 +3,13 @@ and benches must see the real single CPU device; only launch/dryrun.py (and
 the subprocess in test_dryrun_small) force 512/4 placeholder devices."""
 
 
+def pytest_addoption(parser):
+    parser.addoption(
+        "--update-golden", action="store_true", default=False,
+        help="regenerate golden snapshots (tests/golden/) instead of "
+             "comparing against them",
+    )
+
+
 def pytest_configure(config):
     config.addinivalue_line("markers", "slow: long-running integration test")

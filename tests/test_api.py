@@ -236,10 +236,13 @@ class TestSublanePolicy:
     def test_bf16_wastes_strictly_fewer_bytes_than_fp32(self, family, shape):
         p32 = plan_kernel(family, shape, jnp.float32)
         p16 = plan_kernel(family, shape, jnp.bfloat16)
-        assert p16.sublanes == 16 and p32.sublanes == 8
+        assert p32.sublanes == 8
+        # native (16, 128) tile -- unless the fp32 geometry pads fewer
+        # bytes, in which case the planner's narrow-dtype waste guarantee
+        # adopts it (at half the byte price) instead
+        assert p16.sublanes in (8, 16)
+        assert p16.rows % p16.sublanes == 0
         assert p16.waste_bytes < p32.waste_bytes
-        # bf16 rows land on the native (16, 128) tile
-        assert p16.rows % 16 == 0
 
     def test_bf16_plans_stay_tileable_and_parity_holds(self):
         from repro.kernels.stream import ref as sref

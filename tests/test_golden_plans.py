@@ -1,0 +1,102 @@
+"""Golden snapshot of the analytic planner's output.
+
+Every registry kernel x {fp32, bf16} x one odd + one even representative
+shape is planned and compared field-by-field against
+``tests/golden/plans.json``.  Any planner change that moves a padded
+shape, block shape, waste, or predicted traffic shows up as a readable
+per-cell diff here -- deliberate changes are blessed with:
+
+    pytest tests/test_golden_plans.py --update-golden
+"""
+import json
+import os
+
+import pytest
+
+from repro import api
+from repro.core.planner import KernelPlan
+
+GOLDEN_PATH = os.path.join(os.path.dirname(__file__), "golden", "plans.json")
+
+# (odd, even) representative logical shapes per registry kernel.  Odd
+# extents exercise every padding rule; even ones must plan tight.
+SHAPES: dict[str, tuple[tuple[int, ...], tuple[int, ...]]] = {
+    "stream.copy": ((8191,), (131072,)),
+    "stream.scale": ((8191,), (131072,)),
+    "stream.add": ((8191,), (131072,)),
+    "stream.triad": ((8191,), (131072,)),
+    "triad": ((17299,), (65536,)),
+    "jacobi": ((257, 129), (256, 256)),
+    "lbm.soa": ((19, 10, 10, 10), (19, 8, 8, 8)),
+    "lbm.ivjk": ((19, 10, 10, 10), (19, 8, 8, 8)),
+    "rmsnorm": ((301, 1111), (256, 1024)),
+    "rmsnorm.gated": ((301, 1111), (256, 1024)),
+    "xent": ((751, 2943), (256, 2048)),
+}
+DTYPES = ("float32", "bfloat16")
+
+
+def snapshot_plan(plan: KernelPlan) -> dict:
+    return {
+        "padded_shape": list(plan.padded_shape),
+        "block_shape": list(plan.block_shape),
+        "grid": list(plan.grid),
+        "sublanes": plan.sublanes,
+        "waste_bytes": plan.waste_bytes,
+        "predicted_hbm_bytes": plan.predicted_hbm_bytes,
+        "predicted_logical_bytes": plan.predicted_logical_bytes,
+        "predicted_balance": round(plan.predicted_balance, 4),
+        "naive_balance": round(plan.naive_balance, 4),
+    }
+
+
+def current_snapshot() -> dict:
+    # Every *shipped* kernel must be snapshotted (kernels registered ad hoc
+    # by other tests are not); a shipped kernel missing from SHAPES fails.
+    shipped = [k for k in api.list_kernels()
+               if api.get_kernel(k).body.__module__.startswith("repro.")]
+    missing = set(shipped) - set(SHAPES)
+    assert not missing, f"add golden shapes for new kernels: {sorted(missing)}"
+    out = {}
+    for kernel in shipped:
+        for shape in SHAPES[kernel]:
+            for dtype in DTYPES:
+                key = (f"{kernel}|{'x'.join(str(s) for s in shape)}|{dtype}")
+                out[key] = snapshot_plan(api.plan_for(kernel, shape, dtype))
+    return out
+
+
+def test_plans_match_golden(request):
+    current = current_snapshot()
+    if request.config.getoption("--update-golden"):
+        os.makedirs(os.path.dirname(GOLDEN_PATH), exist_ok=True)
+        with open(GOLDEN_PATH, "w") as f:
+            json.dump(current, f, indent=1, sort_keys=True)
+        pytest.skip(f"regenerated {GOLDEN_PATH} ({len(current)} plans)")
+    if not os.path.exists(GOLDEN_PATH):
+        pytest.fail(
+            f"{GOLDEN_PATH} missing; generate it with "
+            f"`pytest {__file__} --update-golden`"
+        )
+    with open(GOLDEN_PATH) as f:
+        golden = json.load(f)
+
+    lines = []
+    for key in sorted(set(golden) | set(current)):
+        if key not in golden:
+            lines.append(f"  + {key}: new cell (not in golden)")
+            continue
+        if key not in current:
+            lines.append(f"  - {key}: golden cell no longer planned")
+            continue
+        for field in sorted(set(golden[key]) | set(current[key])):
+            g, c = golden[key].get(field), current[key].get(field)
+            if g != c:
+                lines.append(f"  ~ {key}.{field}: golden {g} -> current {c}")
+    if lines:
+        pytest.fail(
+            "planner output drifted from tests/golden/plans.json "
+            "(bless deliberate changes with --update-golden):\n"
+            + "\n".join(lines),
+            pytrace=False,
+        )

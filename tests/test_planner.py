@@ -1,10 +1,11 @@
 """Layout planner: cache behavior, plan geometry, balance predictions, and
-wrapper parity on non-tile-multiple shapes (the planner-chosen layouts)."""
+launch parity on non-tile-multiple shapes (the planner-chosen layouts)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro import api
 from repro.core import planner
 from repro.core.layout import LANES, SUBLANES
 from repro.core.planner import clear_plan_cache, plan_cache_info, plan_kernel
@@ -92,11 +93,9 @@ class TestPlanGeometry:
 
     def test_mismatched_plan_rejected(self):
         """A plan for one shape cannot silently drop another array's tail."""
-        from repro.kernels.stream import ops as sops
-
         plan = plan_kernel("stream.copy", (1000,), jnp.float32)
         with pytest.raises(ValueError, match="is for shape"):
-            sops.stream_copy(jnp.ones(2000), plan=plan)
+            api.launch("stream.copy", jnp.ones(2000), plan=plan)
 
     def test_explain_reports_balance_and_waste(self):
         txt = planner.explain("triad", (8191,), jnp.float32)
@@ -123,57 +122,54 @@ class TestBalancePredictions:
             assert p.predicted_balance > 3 * p.naive_balance
 
 
-class TestWrapperParity:
-    """Every kernel wrapper against its ref on non-tile-multiple shapes."""
+class TestLaunchParity:
+    """Every kernel family against its ref on non-tile-multiple shapes,
+    through the unified launch path (the shims stay covered -- explicitly --
+    in test_api.TestDeprecatedShims)."""
 
     @pytest.mark.parametrize("n", [1000, 8191])
     def test_stream_triad(self, n):
-        from repro.kernels.stream import ops as sops
         from repro.kernels.stream import ref as sref
 
         b, c = rnd((n,), jnp.float32, 0), rnd((n,), jnp.float32, 1)
         np.testing.assert_allclose(
-            np.asarray(sops.stream_triad(b, c, 3.0)),
+            np.asarray(api.launch("stream.triad", b, c, s=3.0)),
             np.asarray(sref.triad(b, c, 3.0)), rtol=1e-6, atol=1e-6)
 
     @pytest.mark.parametrize("n", [1000, 8191])
     def test_vector_triad(self, n):
-        from repro.kernels.triad import ops as tops
         from repro.kernels.triad import ref as tref
 
         b, c, d = (rnd((n,), jnp.float32, i) for i in range(3))
         np.testing.assert_allclose(
-            np.asarray(tops.vector_triad(b, c, d)),
+            np.asarray(api.launch("triad", b, c, d)),
             np.asarray(tref.triad(b, c, d)), rtol=1e-6, atol=1e-6)
 
     def test_jacobi_ragged_cols(self):
-        from repro.kernels.jacobi import ops as jops
         from repro.kernels.jacobi import ref as jref
 
         g = rnd((67, 129), jnp.float32, 0)
-        np.testing.assert_allclose(np.asarray(jops.jacobi_step(g)),
+        np.testing.assert_allclose(np.asarray(api.launch("jacobi", g)),
                                    np.asarray(jref.jacobi_step(g)),
                                    rtol=1e-5, atol=1e-6)
 
     def test_rmsnorm_ragged_cols(self):
-        from repro.kernels.rmsnorm import ops as rops
         from repro.kernels.rmsnorm import ref as rref
 
         x = rnd((3, 129), jnp.float32, 0)
         s = rnd((129,), jnp.float32, 1) + 1.0
-        np.testing.assert_allclose(np.asarray(rops.rmsnorm(x, s)),
+        np.testing.assert_allclose(np.asarray(api.launch("rmsnorm", x, s)),
                                    np.asarray(rref.rmsnorm(x, s)),
                                    rtol=1e-5, atol=1e-6)
 
     def test_xent_planner_tiles(self):
         """No explicit bt/bv: the planner picks the online-softmax tile."""
-        from repro.kernels.xent import ops as xops
         from repro.kernels.xent import ref as xref
 
         t, v, lv = 129, 1111, 1000
         logits = jax.random.normal(jax.random.PRNGKey(0), (t, v)) * 3
         labels = jax.random.randint(jax.random.PRNGKey(1), (t,), 0, lv)
-        got = float(xops.xent_mean(logits, labels, logical_v=lv))
+        got = float(api.launch("xent", logits, labels, logical_v=lv))
         want = float(xref.xent(logits, labels, logical_v=lv).mean())
         assert abs(got - want) < 1e-4
 
@@ -183,7 +179,7 @@ class TestWrapperParity:
 
         f = lops.init_equilibrium(6, jnp.float32)  # S=216: ragged everywhere
         for layout in ("soa", "ivjk"):
-            got = lops.lbm_step(f, 1.2, layout=layout)
+            got = api.launch(f"lbm.{layout}", f, omega=1.2)
             np.testing.assert_allclose(np.asarray(got),
                                        np.asarray(lref.lbm_step(f, 1.2)),
                                        rtol=2e-5, atol=1e-7)

@@ -1,0 +1,124 @@
+"""Hypothesis property tests for planner invariants.
+
+The example-based planner tests (test_planner.py) pin known shapes; these
+properties assert the closed-form rules hold over the whole input space the
+planner accepts: tile divisibility, nonnegative (and aligned-zero) waste,
+bf16 never paying more padding bytes than fp32, and memo-key stability.
+"""
+from _hypothesis_compat import given, settings
+from _hypothesis_compat import strategies as st
+
+from repro.core.layout import LANES
+from repro.core.planner import (
+    clear_plan_cache,
+    plan_cache_keys,
+    plan_kernel,
+    sublanes_for_dtype,
+)
+
+FAMILIES_1D = ["stream.copy", "stream.add", "stream.triad", "triad"]
+FAMILIES_2D = ["rmsnorm", "rmsnorm.gated", "xent", "jacobi"]
+DTYPES = ["float32", "bfloat16"]
+
+
+class TestTileDivisibility:
+    """Every padded extent is a whole number of blocks: the grid never
+    launches a ragged tail DMA."""
+
+    @settings(max_examples=60)
+    @given(kernel=st.sampled_from(FAMILIES_1D + FAMILIES_2D),
+           dtype=st.sampled_from(DTYPES),
+           a=st.integers(min_value=1, max_value=50_000),
+           b=st.integers(min_value=1, max_value=4_000))
+    def test_padded_divisible_by_block(self, kernel, dtype, a, b):
+        shape = (a,) if kernel in FAMILIES_1D else (a % 3000 + 1, b)
+        plan = plan_kernel(kernel, shape, dtype)
+        for padded, block in zip(plan.padded_shape, plan.block_shape):
+            assert padded % block == 0, plan.explain()
+        assert plan.rows % plan.sublanes == 0
+        assert plan.width % LANES == 0
+
+    @settings(max_examples=20)
+    @given(dtype=st.sampled_from(DTYPES),
+           layout=st.sampled_from(["lbm.soa", "lbm.ivjk"]),
+           n=st.integers(min_value=2, max_value=40))
+    def test_lbm_padded_divisible_by_block(self, dtype, layout, n):
+        plan = plan_kernel(layout, (19, n, n, n), dtype)
+        for padded, block in zip(plan.padded_shape, plan.block_shape):
+            assert padded % block == 0, plan.explain()
+
+
+class TestWaste:
+    @settings(max_examples=60)
+    @given(kernel=st.sampled_from(FAMILIES_1D + FAMILIES_2D),
+           dtype=st.sampled_from(DTYPES),
+           a=st.integers(min_value=1, max_value=50_000),
+           b=st.integers(min_value=1, max_value=4_000))
+    def test_waste_bytes_nonnegative(self, kernel, dtype, a, b):
+        shape = (a,) if kernel in FAMILIES_1D else (a % 3000 + 1, b)
+        plan = plan_kernel(kernel, shape, dtype)
+        assert plan.waste_bytes >= 0
+        assert plan.predicted_hbm_bytes >= plan.predicted_logical_bytes
+
+    @settings(max_examples=40)
+    @given(kernel=st.sampled_from(["rmsnorm", "rmsnorm.gated", "xent"]),
+           dtype=st.sampled_from(DTYPES),
+           r=st.integers(min_value=1, max_value=16),
+           c=st.integers(min_value=1, max_value=8))
+    def test_zero_waste_on_aligned_2d_shapes(self, kernel, dtype, r, c):
+        """A shape already on the dtype's (sublane, lane) tile pays nothing
+        (rows small enough that one block covers them, so the block chooser
+        never rounds the row count up)."""
+        sub = sublanes_for_dtype(dtype)
+        plan = plan_kernel(kernel, (r * sub, c * LANES), dtype)
+        assert plan.waste_bytes == 0, plan.explain()
+        assert plan.padded_shape == plan.logical_shape
+
+    @settings(max_examples=20)
+    @given(kernel=st.sampled_from(["stream.copy", "stream.triad", "triad"]),
+           k=st.integers(min_value=1, max_value=32))
+    def test_zero_waste_on_aligned_1d_shapes(self, kernel, k):
+        plan = plan_kernel(kernel, (k * 8 * LANES,), "float32")
+        assert plan.waste_bytes == 0, plan.explain()
+
+    @settings(max_examples=40)
+    @given(kernel=st.sampled_from(["triad", "rmsnorm", "xent"]),
+           a=st.integers(min_value=1, max_value=30_000),
+           b=st.integers(min_value=1, max_value=3_000))
+    def test_bf16_waste_bytes_at_most_fp32(self, kernel, a, b):
+        """On identical odd shapes the bf16 plan never pays more padding
+        *bytes* than fp32: wider sublane tiles can pad more elements, but
+        each costs half as much."""
+        shape = (2 * a + 1,) if kernel == "triad" else (a % 2000 + 1,
+                                                        2 * b + 1)
+        p32 = plan_kernel(kernel, shape, "float32")
+        p16 = plan_kernel(kernel, shape, "bfloat16")
+        assert p16.waste_bytes <= p32.waste_bytes, (
+            p16.explain(), p32.explain())
+
+
+class TestCacheKeyStability:
+    @settings(max_examples=20)
+    @given(kernel=st.sampled_from(FAMILIES_1D),
+           n=st.integers(min_value=1, max_value=100_000))
+    def test_repeated_calls_hit_the_memo(self, kernel, n):
+        clear_plan_cache()
+        first = plan_kernel(kernel, (n,), "float32")
+        keys_after_first = plan_cache_keys()
+        again = plan_kernel(kernel, (n,), "float32")
+        assert again is first                      # same object, not equal
+        assert plan_cache_keys() == keys_after_first  # no new key minted
+
+    @settings(max_examples=20)
+    @given(tp=st.integers(min_value=1, max_value=8),
+           r=st.integers(min_value=1, max_value=2_000))
+    def test_mesh_equality_not_identity(self, tp, r):
+        """Two distinct but equal mesh mappings share one memo entry: the
+        key hashes mesh *contents*, never object identity."""
+        clear_plan_cache()
+        a = plan_kernel("rmsnorm", (r, 1111), "float32",
+                        mesh={"model": tp, "data": 2})
+        b = plan_kernel("rmsnorm", (r, 1111), "float32",
+                        mesh={"data": 2, "model": tp})  # same mapping, new dict
+        assert b is a
+        assert len([k for k in plan_cache_keys() if k[0] == "rmsnorm"]) == 1
