@@ -10,8 +10,14 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 # explainable (fails fast on unregistered/shadowed names).
 python scripts/api_smoke.py
 # Stage 2: measure smoke -- one family validated end-to-end (plan ->
-# compile -> HLO bytes vs predicted traffic) in a few seconds.
-python -m repro.measure.validate --family stream --out /tmp/tier1_validation.json
+# compile -> HLO bytes vs predicted traffic) in a few seconds.  The report
+# goes to a per-run mktemp path so concurrent CI jobs sharing a runner (or
+# a developer running two checkouts) never clobber each other; set
+# TIER1_VALIDATION_OUT to pin a path (CI does, to upload it as an artifact).
+# (no .json suffix on the template: BSD mktemp requires trailing Xs)
+VALIDATION_OUT="${TIER1_VALIDATION_OUT:-$(mktemp "${TMPDIR:-/tmp}/tier1_validation.XXXXXX")}"
+python -m repro.measure.validate --family stream --out "$VALIDATION_OUT"
+echo "tier1: validation report at $VALIDATION_OUT"
 # Stage 3: fast test matrix (full sweeps carry the `sweep` marker and run
 # out-of-band: pytest -m sweep).
 exec python -m pytest -q -m "not slow and not sweep" "$@"

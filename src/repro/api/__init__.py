@@ -27,6 +27,7 @@ from repro.api.registry import (
     list_kernels,
     register_kernel,
 )
+from repro.api.spmd import SCALAR, Partitioning, spmd_mesh
 
 __all__ = [
     "PlanContext", "plan_context", "current_context",
@@ -34,4 +35,5 @@ __all__ = [
     "launch", "plan_for", "explain", "ref",
     "register_kernel", "get_kernel", "list_kernels",
     "KernelEntry", "FAMILY_MODULES",
+    "Partitioning", "SCALAR", "spmd_mesh",
 ]

@@ -64,6 +64,14 @@ class PlanContext:
         swept profile (``repro.measure.profile.load_profile``) produces so
         one kernel can carry measured plans for many shapes; cell keys win
         over bare kernel names.
+    spmd:
+        whether ``launch`` may route through the shard_map SPMD path when
+        the mesh is a real multi-device ``jax.sharding.Mesh`` (see
+        ``repro.api.spmd``).  ``plan_context(spmd=False)`` keeps such a
+        mesh planning shard-aligned padding while forcing every launch in
+        the scope to stay single-device -- the lever tests use to compare
+        the SPMD path against its own non-SPMD baseline, and callers use
+        around code that is already inside a manual shard_map.
     """
 
     mesh: Any = None
@@ -73,6 +81,7 @@ class PlanContext:
     plan_overrides: Mapping[str, KernelPlan] = dataclasses.field(
         default_factory=dict
     )
+    spmd: bool = True
 
     def sublanes_for(self, dtype) -> int:
         """Sublane tile height for ``dtype`` under this context's policy."""
@@ -157,13 +166,13 @@ def reset_default_context() -> None:
 
 @contextlib.contextmanager
 def plan_context(mesh=_UNSET, *, sublane_policy=_UNSET, vmem_budget=_UNSET,
-                 model=_UNSET, plan_overrides=_UNSET):
+                 model=_UNSET, plan_overrides=_UNSET, spmd=_UNSET):
     """Enter a derived ``PlanContext``; unspecified fields inherit from the
     enclosing context (or the process default at the outermost level)."""
     base = current_context()
     ctx = base.evolve(mesh=mesh, sublane_policy=sublane_policy,
                       vmem_budget=vmem_budget, model=model,
-                      plan_overrides=plan_overrides)
+                      plan_overrides=plan_overrides, spmd=spmd)
     st = _stack()
     st.append(ctx)
     try:

@@ -14,22 +14,36 @@ Pallas body.  Every kernel family therefore plans through exactly the same
 policy -- the paper's requirement that one layout analysis governs all loop
 kernels -- and a mesh set once via ``plan_context(mesh=...)`` reaches the
 planner from any call site without signature churn.
+
+When the ambient mesh is a *real* multi-device ``jax.sharding.Mesh``,
+``launch`` routes through the SPMD path instead (``repro.api.spmd``): the
+kernel's registered ``Partitioning`` becomes shard_map in/out specs, and
+each shard plans its own local block shape.  Single-device programs (and
+scopes under ``plan_context(spmd=False)``) keep the direct path below.
 """
 from __future__ import annotations
+
+import warnings
 
 import numpy as np
 
 from repro.api import context as context_lib
 from repro.api import registry as registry_lib
+from repro.api import spmd as spmd_lib
 from repro.core.planner import KernelPlan, plan_kernel
 
 __all__ = ["launch", "plan_for", "explain", "ref"]
 
 
-def plan_for(kernel: str, shape, dtype, *, ctx=None) -> KernelPlan:
+def plan_for(kernel: str, shape, dtype, *, ctx=None,
+             local: bool = False) -> KernelPlan:
     """The plan ``launch`` would use for ``kernel`` on (shape, dtype) under
     the ambient (or given) ``PlanContext``.  Requires the kernel to be
-    registered -- unknown names fail here, not at launch time."""
+    registered -- unknown names fail here, not at launch time.
+
+    ``local=True`` plans a *per-shard* launch (the SPMD path): the shape is
+    one device's shard, so the minor dim is not widened again for the
+    mesh's tensor-parallel axis -- the mesh still keys the memo entry."""
     entry = registry_lib.resolve(kernel)
     ctx = ctx or context_lib.current_context()
     # Overrides are keyed two ways: a bare kernel name pins one plan for
@@ -51,6 +65,7 @@ def plan_for(kernel: str, shape, dtype, *, ctx=None) -> KernelPlan:
         model=ctx.model,
         sublanes=ctx.sublanes_for(dtype),
         vmem_budget=ctx.vmem_budget,
+        local=local,
     )
 
 
@@ -82,17 +97,52 @@ def _validate(entry, plan: KernelPlan, shape, dtype) -> None:
 def launch(kernel: str, *arrays, plan: KernelPlan | None = None, **scalars):
     """Run a registered kernel on ``arrays`` under the ambient PlanContext.
 
-    ``plan`` pins an explicit ``KernelPlan`` (still validated); otherwise
-    the context's ``plan_overrides`` and then the memoized planner decide.
-    Scalars (including optional array-valued options like LBM's ``mask``)
-    pass through as keywords to the registered body.
+    With an ambient multi-device ``jax.sharding.Mesh`` (and no pinned
+    ``plan``), the launch partitions over the mesh via shard_map using the
+    kernel's registered ``Partitioning``; each shard plans its local block
+    shape (``repro.api.spmd``).  Otherwise ``plan`` pins an explicit
+    ``KernelPlan`` (still validated), else the context's ``plan_overrides``
+    and then the memoized planner decide.  Scalars (including optional
+    array-valued options like LBM's ``mask``) pass through as keywords to
+    the registered body.
     """
     entry = registry_lib.resolve(kernel)
+    if plan is None:
+        mesh = spmd_lib.spmd_mesh()
+        if mesh is not None:
+            # plan_args is not derived here: the shard body re-derives it
+            # from each shard's local arrays (validation included).
+            _warn_spmd_shadowed_overrides(entry.name)
+            return spmd_lib.spmd_launch(entry, mesh, arrays, scalars)
     shape, dtype = entry.plan_args(*arrays, **scalars)
     if plan is None:
         plan = plan_for(kernel, shape, dtype)
     _validate(entry, plan, shape, dtype)
     return entry.body(plan, *arrays, **scalars)
+
+
+_SPMD_OVERRIDE_WARNED: set[str] = set()
+
+
+def _warn_spmd_shadowed_overrides(kernel: str) -> None:
+    """Under the SPMD route, plans resolve inside the shard body against
+    *local* shapes -- so a profile swept at global shapes (or a bare-name
+    pin recorded at a global shape) silently never matches.  Say so once
+    per kernel instead of letting --plan-profile look active but be inert
+    (sweep at per-shard shapes to pin plans on SPMD runs)."""
+    ctx = context_lib.current_context()
+    has_override = kernel in ctx.plan_overrides or any(
+        isinstance(k, tuple) and k and k[0] == kernel
+        for k in ctx.plan_overrides
+    )
+    if has_override and kernel not in _SPMD_OVERRIDE_WARNED:
+        _SPMD_OVERRIDE_WARNED.add(kernel)
+        warnings.warn(
+            f"plan override(s) for {kernel!r} under an SPMD mesh: overrides "
+            f"are matched against per-shard *local* shapes inside shard_map, "
+            f"so cells keyed on global shapes will not apply",
+            RuntimeWarning, stacklevel=3,
+        )
 
 
 def ref(kernel: str, *arrays, **scalars):

@@ -20,6 +20,11 @@ declaring, in one spot, everything the unified launch path needs:
   * ``plan_args`` -- how to derive the *logical planning shape* from the
     call's arrays (1-D streams plan on ``a.shape``; rmsnorm flattens leading
     dims; jacobi plans its interior rows; LBM plans the whole lattice).
+  * ``partitioning`` -- the SPMD placement rule (``repro.api.spmd``): which
+    operand axes are batch-parallel over a multi-device mesh, which stay
+    replicated, and how scalar results combine across shards.  ``launch``
+    uses it to route through shard_map when an ambient multi-device Mesh is
+    set; kernels registered without one run fully replicated.
   * the decorated function -- the Pallas launch body, taking the resolved
     ``KernelPlan`` first: ``body(plan, *arrays, **scalars)``.
 
@@ -34,6 +39,7 @@ import dataclasses
 import importlib
 from typing import Callable
 
+from repro.api.spmd import Partitioning
 from repro.core import planner as planner_lib
 from repro.core.autotune import StreamSignature
 
@@ -57,6 +63,7 @@ class KernelEntry:
     ref: Callable
     plan_args: Callable      # (*arrays, **scalars) -> (shape, dtype)
     body: Callable           # (plan, *arrays, **scalars) -> result
+    partitioning: Partitioning | None = None  # SPMD rule (None = replicated)
     doc: str = ""
 
 
@@ -69,6 +76,7 @@ def register_kernel(
     signature: StreamSignature,
     ref: Callable,
     plan_args: Callable,
+    partitioning: Partitioning | None = None,
     vmem_buffers: int | None = None,
     col_tiled: bool = False,
     doc: str = "",
@@ -76,7 +84,9 @@ def register_kernel(
     """Decorator: declare a kernel family's streams and launch body.
 
     ``vmem_buffers``/``col_tiled`` feed the planner's block-geometry tables
-    (see ``core.planner.register_family``).
+    (see ``core.planner.register_family``).  ``partitioning`` is the SPMD
+    placement rule (``repro.api.spmd.Partitioning``); omitted, the kernel
+    runs fully replicated under a multi-device mesh.
     """
 
     def deco(body: Callable) -> Callable:
@@ -91,6 +101,16 @@ def register_kernel(
                 f"{prev.body.__module__}.{prev.body.__qualname__}; "
                 f"refusing shadow registration"
             )
+        # Validate before register_family mutates planner state: a failed
+        # registration must not leave a phantom family the planner can plan
+        # but the registry cannot launch.
+        if partitioning is not None and not isinstance(partitioning,
+                                                       Partitioning):
+            raise TypeError(
+                f"kernel {name!r}: partitioning must be a "
+                f"repro.api.spmd.Partitioning, got "
+                f"{type(partitioning).__name__}"
+            )
         planner_lib.register_family(name, signature,
                                     vmem_buffers=vmem_buffers,
                                     col_tiled=col_tiled)
@@ -100,6 +120,7 @@ def register_kernel(
             ref=ref,
             plan_args=plan_args,
             body=body,
+            partitioning=partitioning,
             doc=doc or (body.__doc__ or "").strip(),
         )
         return body

@@ -1,0 +1,226 @@
+"""SPMD kernel launch: shard_map partitioning for registered Pallas kernels.
+
+A ``pallas_call`` carries no SPMD partitioning rule, so before this module a
+multi-device program had exactly two options: silently fall back to jnp
+(what ``models.blocks.use_fused_kernels`` did) or fail to lower.  The paper
+analog is Treibig/Hager/Wellein's point that per-domain *placement*, not
+just per-core tiling, determines achieved bandwidth: a block shape tuned
+for one core's cache is worthless if the thread's working set lands on the
+wrong memory controller.  Here the placement rule is the kernel's
+``Partitioning`` declaration -- which operand axes are batch-parallel (each
+device owns a shard and launches the planned kernel on it), which are
+replicated, and how per-shard scalar results combine across shards.
+
+Every ``@register_kernel`` entry carries a declaration; ``api.launch``
+detects an ambient multi-device ``jax.sharding.Mesh`` (``spmd_mesh``) and
+routes through ``shard_map``:
+
+  * in/out PartitionSpecs come from ``parallel.rules`` -- the same
+    logical-axis tables the model's activations use -- restricted to the
+    mesh's axes, with the divisibility fallback to replication (an odd
+    batch never produces ragged shards, it replicates);
+  * inside the body each shard re-derives its plan from its own *local*
+    operand shape (``plan_for(..., local=True)``), memoized under
+    ``(kernel, local_shape, dtype, mesh)`` -- the per-shard block shape is
+    planned, not inherited from the global array;
+  * scalar outputs declare their cross-shard combine (``reduce="mean"``
+    for xent's token-mean NLL), applied with ``pmean``/``psum`` over the
+    mesh axes the sharded operand axes actually mapped to.
+
+Kernels whose access pattern couples neighboring sites (jacobi's halo
+rows, LBM's streaming shifts) declare themselves ``replicated``: every
+device computes the full array -- correct, and it keeps one launch path
+instead of a per-kernel fallback maze.
+
+The path never nests: inside an existing shard_map/pmap body (pipeline
+stages) ``spmd_mesh`` returns None and ``launch`` stays single-device.
+``plan_context(spmd=False)`` opts a scope out explicitly.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.api import context as context_lib
+from repro.parallel import rules as rules_lib
+from repro.parallel.shardmap_compat import NO_CHECK, inside_shard_map, shard_map
+
+__all__ = ["Partitioning", "SCALAR", "replicated", "partitioning_for",
+           "spmd_mesh", "spmd_launch"]
+
+# Sentinel out_axes: the kernel reduces to a scalar (rank-0) result.
+SCALAR = "scalar"
+
+_REDUCES = (None, "mean", "sum")
+
+
+@dataclasses.dataclass(frozen=True)
+class Partitioning:
+    """How one registered kernel partitions over an SPMD mesh.
+
+    in_axes:
+        one template per positional operand: a tuple of *logical* axis
+        names (``parallel.rules`` vocabulary: "batch", "vocab", ...) or
+        ``None`` (replicate that dim), one entry per array dimension.  An
+        ``...`` (Ellipsis) entry expands to ``None`` for however many
+        middle dims the operand has, so one template serves the 2-D
+        kernel-level call and the 3-D model call: ``("batch", ..., None)``
+        is ``("batch", None)`` for (rows, d) and ``("batch", None, None)``
+        for (B, S, d).
+    out_axes:
+        the output's template (the output is assumed shaped like operand 0,
+        the convention every registered family follows), or ``SCALAR`` for
+        a rank-0 reduction result.
+    reduce:
+        cross-shard combine for ``SCALAR`` outputs: "mean" (xent's
+        token-mean -- exact because shard_map shards are equal-sized) or
+        "sum".  Required for SCALAR, forbidden otherwise.
+    """
+
+    in_axes: tuple[tuple, ...]
+    out_axes: tuple | str = (...,)
+    reduce: str | None = None
+
+    def __post_init__(self):
+        if self.reduce not in _REDUCES:
+            raise ValueError(
+                f"reduce must be one of {_REDUCES}, got {self.reduce!r}"
+            )
+        if self.out_axes == SCALAR and self.reduce is None:
+            raise ValueError(
+                "a SCALAR output needs a cross-shard reduce: each shard "
+                "computes only its local partial"
+            )
+        if self.reduce is not None and self.out_axes != SCALAR:
+            raise ValueError(
+                f"reduce={self.reduce!r} only applies to SCALAR outputs"
+            )
+
+
+def replicated(n_inputs: int) -> Partitioning:
+    """Fully-replicated declaration: every device computes the whole array.
+    The right call for kernels whose stencil couples neighboring sites
+    across any split (jacobi halos, LBM streaming) -- and the safe default
+    for kernels registered without a declaration."""
+    return Partitioning(in_axes=((...,),) * n_inputs, out_axes=(...,))
+
+
+def partitioning_for(entry, n_inputs: int) -> Partitioning:
+    """The entry's declared partitioning, or the replicated default for its
+    ``n_inputs`` positional operands."""
+    part = getattr(entry, "partitioning", None)
+    return part if part is not None else replicated(n_inputs)
+
+
+def _expand(template, ndim: int) -> tuple:
+    """Instantiate an axes template for a rank-``ndim`` operand."""
+    t = tuple(template)
+    if Ellipsis in t:
+        i = t.index(Ellipsis)
+        head, tail = t[:i], t[i + 1:]
+        n_mid = ndim - len(head) - len(tail)
+        if n_mid < 0:
+            raise ValueError(
+                f"axes template {template} needs rank >= "
+                f"{len(head) + len(tail)}, operand has rank {ndim}"
+            )
+        return head + (None,) * n_mid + tail
+    if len(t) != ndim:
+        raise ValueError(
+            f"axes template {template} is rank-{len(t)}, "
+            f"operand has rank {ndim}"
+        )
+    return t
+
+
+def _spec_mesh_axes(spec: P) -> tuple[str, ...]:
+    """Every mesh axis name appearing in a PartitionSpec, in order."""
+    names: list[str] = []
+    for part in spec:
+        if part is None:
+            continue
+        for n in (part,) if isinstance(part, str) else tuple(part):
+            if n not in names:
+                names.append(n)
+    return tuple(names)
+
+
+def spmd_mesh(ctx: "context_lib.PlanContext | None" = None):
+    """The mesh ``launch`` would shard_map over right now, or ``None``.
+
+    Routing requires a *real* multi-device ``jax.sharding.Mesh`` (a
+    ``{axis: size}`` mapping plans shard-aligned padding but cannot place
+    computation), an SPMD-enabled context, and no enclosing mapped trace
+    (nesting a shard_map inside a pipeline stage's shard_map would rebind
+    its axis names).  ``models.blocks.use_fused_kernels`` gates the model
+    hot paths on exactly this predicate."""
+    ctx = ctx if ctx is not None else context_lib.current_context()
+    if not ctx.spmd:
+        return None
+    mesh = ctx.mesh
+    if mesh is None:
+        mesh = rules_lib.current_mesh()
+    if not isinstance(mesh, jax.sharding.Mesh):
+        return None
+    if mesh.size <= 1:
+        return None
+    if inside_shard_map():
+        return None
+    return mesh
+
+
+def spmd_launch(entry, mesh, arrays, scalars):
+    """Launch ``entry`` on ``arrays`` partitioned over ``mesh``.
+
+    Builds in/out specs from the kernel's declaration under the ambient
+    (or default) sharding rules, then shard_maps a body that plans each
+    shard's *local* block shape and runs the registered Pallas body on it.
+    Scalar kwargs (eps, omega, ...) close over the body; array-valued
+    options ride along replicated.
+    """
+    part = partitioning_for(entry, len(arrays))
+    if len(part.in_axes) != len(arrays):
+        raise ValueError(
+            f"{entry.name}: partitioning declares {len(part.in_axes)} "
+            f"operand(s), launch got {len(arrays)}"
+        )
+    table = rules_lib.restrict_to_mesh(
+        rules_lib.current_rules() or rules_lib.DEFAULT_RULES, mesh
+    )
+    sizes = dict(zip(tuple(mesh.axis_names), tuple(mesh.devices.shape)))
+    in_specs = tuple(
+        rules_lib.spec(*_expand(t, a.ndim), rules=table,
+                       shape=tuple(int(s) for s in a.shape),
+                       axis_sizes=sizes)
+        for t, a in zip(part.in_axes, arrays)
+    )
+    if part.out_axes == SCALAR:
+        out_spec = P()
+        # The local partial must be combined over every mesh axis the
+        # (sharded) data operand was split across; if divisibility forced
+        # full replication this is empty and the local result is global.
+        reduce_axes = _spec_mesh_axes(in_specs[0])
+    else:
+        out_spec = rules_lib.spec(
+            *_expand(part.out_axes, arrays[0].ndim), rules=table,
+            shape=tuple(int(s) for s in arrays[0].shape), axis_sizes=sizes)
+        reduce_axes = ()
+
+    def _shard_body(*local):
+        from repro.api import dispatch  # lazy: dispatch imports this module
+
+        shape, dtype = entry.plan_args(*local, **scalars)
+        plan = dispatch.plan_for(entry.name, shape, dtype, local=True)
+        out = entry.body(plan, *local, **scalars)
+        if reduce_axes:
+            if part.reduce == "mean":
+                out = jax.lax.pmean(out, reduce_axes)
+            elif part.reduce == "sum":
+                out = jax.lax.psum(out, reduce_axes)
+        return out
+
+    fn = shard_map(_shard_body, mesh=mesh, in_specs=in_specs,
+                   out_specs=out_spec, **NO_CHECK)
+    return fn(*arrays)

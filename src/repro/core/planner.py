@@ -338,6 +338,7 @@ def plan_kernel(
     model: InterleavedMemoryModel | None = None,
     sublanes: int | None = None,
     vmem_budget: int | None = None,
+    local: bool = False,
 ) -> KernelPlan:
     """Memoized analytic plan for ``kernel`` on a logical ``shape``/``dtype``.
 
@@ -347,6 +348,14 @@ def plan_kernel(
     32 fp8); ``vmem_budget`` caps the per-core VMEM bytes the block chooser
     may assume.  Both default from the dtype / hardware and are normally
     supplied by the ambient ``repro.api.PlanContext``.
+
+    ``local=True`` plans one *shard's* launch under the SPMD path
+    (``repro.api.spmd``): ``shape`` is already a per-device slice, so the
+    minor dim is padded only to the lane tile, not widened again by the
+    mesh's tensor-parallel width -- the global array was split there, the
+    local array was not.  The mesh still participates in the memo key, so
+    per-shard plans are cached as ``(kernel, local_shape, dtype, mesh)``
+    without colliding with global plans of the same shape.
     """
     if kernel not in FAMILIES:
         raise KeyError(
@@ -362,14 +371,15 @@ def plan_kernel(
     if budget <= 0:
         raise ValueError(f"vmem_budget must be positive, got {vmem_budget}")
     key = (kernel, tuple(int(s) for s in shape), dt.name, mesh_key, model,
-           sub, budget)
+           sub, budget, bool(local))
     with _LOCK:
         plan = _CACHE.get(key)
         if plan is not None:
             _STATS["hits"] += 1
             return plan
         _STATS["misses"] += 1
-        plan = _plan_uncached(kernel, key[1], dt, mesh_key, model, sub, budget)
+        plan = _plan_uncached(kernel, key[1], dt, mesh_key, model, sub,
+                              budget, local=bool(local))
         _CACHE[key] = plan
         return plan
 
@@ -409,7 +419,8 @@ def explain(kernel: str, shape, dtype, *, mesh=None,
 
 def _plan_uncached(kernel: str, shape: tuple[int, ...], dt: np.dtype,
                    mesh_key, model: InterleavedMemoryModel,
-                   sublanes: int, budget: int) -> KernelPlan:
+                   sublanes: int, budget: int, *,
+                   local: bool = False) -> KernelPlan:
     sig = dataclasses.replace(FAMILIES[kernel], elem_bytes=dt.itemsize)
     n_buffers = VMEM_BUFFERS.get(kernel, sig.n_streams + 1)
     if kernel.startswith("lbm."):
@@ -417,7 +428,10 @@ def _plan_uncached(kernel: str, shape: tuple[int, ...], dt: np.dtype,
     elif len(shape) == 1:
         padded, block = _plan_1d(shape[0], sig, n_buffers, sublanes, budget)
     elif len(shape) == 2:
-        tp = dict(mesh_key).get("model", 1)
+        # A shard-local plan pads the minor dim to the plain lane tile: the
+        # tensor-parallel widening aligns *global* arrays to their shard
+        # boundaries, and a per-device slice has no shard boundary in it.
+        tp = 1 if local else dict(mesh_key).get("model", 1)
         padded, block = _plan_2d(shape, sig, tp, n_buffers, sublanes, budget,
                                  col_tiled=kernel in COL_TILED)
     else:
@@ -450,7 +464,7 @@ def _plan_uncached(kernel: str, shape: tuple[int, ...], dt: np.dtype,
     # (context sublane_policy) are honored untouched.
     if dt.itemsize < 4 and sublanes == sublanes_for_dtype(dt):
         f32 = plan_kernel(kernel, shape, np.float32, mesh=mesh_key,
-                          model=model, vmem_budget=budget)
+                          model=model, vmem_budget=budget, local=local)
         if plan.waste_bytes * 4 > f32.waste_bytes * dt.itemsize:
             plan = dataclasses.replace(
                 plan, padded_shape=f32.padded_shape,

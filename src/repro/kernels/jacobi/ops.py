@@ -14,6 +14,7 @@ import jax.numpy as jnp
 
 from repro.api import dispatch
 from repro.api.registry import register_kernel
+from repro.api.spmd import replicated
 from repro.core.autotune import StreamSignature
 from repro.kernels._shims import deprecated_wrapper
 from repro.kernels.jacobi import kernel, ref
@@ -40,7 +41,11 @@ def _step(src, *, plan):
 
 @register_kernel("jacobi", signature=StreamSignature(n_read=1, n_write=1),
                  ref=lambda src: ref.jacobi_step(src), plan_args=_plan_args,
-                 vmem_buffers=4)
+                 vmem_buffers=4,
+                 # the 5-point stencil couples neighboring rows: a row
+                 # split would need a halo exchange per sweep, so the
+                 # SPMD path runs the grid replicated on every device
+                 partitioning=replicated(1))
 def _launch_jacobi(plan, src):
     """One aligned 5-point sweep on an (N, M) grid (boundaries copied).
     Rows stream once from HBM; the 3 shifted row views are distinct Pallas

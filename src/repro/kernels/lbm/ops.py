@@ -16,6 +16,7 @@ import jax.numpy as jnp
 
 from repro.api import dispatch
 from repro.api.registry import register_kernel
+from repro.api.spmd import replicated
 from repro.core.aliasing import InterleavedMemoryModel
 from repro.core.autotune import StreamSignature, choose_layout
 from repro.kernels._shims import deprecated_wrapper
@@ -75,15 +76,18 @@ def _lbm_ref(f, *, omega, mask=None):
     return post if mask is None else jnp.where(mask[None], post, f)
 
 
+# Streaming (propagate) shifts every site into its neighbors each step:
+# a lattice split would need halo exchanges, so both layouts run
+# replicated under the SPMD path.
 @register_kernel("lbm.soa", signature=_SIG, ref=_lbm_ref,
-                 plan_args=_plan_args)
+                 plan_args=_plan_args, partitioning=replicated(1))
 def _launch_soa(plan, f, *, omega, mask=None):
     """Propagate (lax roll) + Pallas BGK collision, f stored (Q, S)."""
     return _step_soa(f, omega, mask, plan=plan)
 
 
 @register_kernel("lbm.ivjk", signature=_SIG, ref=_lbm_ref,
-                 plan_args=_plan_args)
+                 plan_args=_plan_args, partitioning=replicated(1))
 def _launch_ivjk(plan, f, *, omega, mask=None):
     """Collision with directions interleaved at lane granularity
     (the paper's auto-skewed IvJK layout)."""

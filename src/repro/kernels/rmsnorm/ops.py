@@ -12,6 +12,7 @@ import jax.numpy as jnp
 
 from repro.api import dispatch
 from repro.api.registry import register_kernel
+from repro.api.spmd import Partitioning
 from repro.core.autotune import StreamSignature
 from repro.kernels._shims import deprecated_wrapper
 from repro.kernels.rmsnorm import kernel, ref
@@ -62,9 +63,20 @@ def _gated(x, z, scale, *, plan, eps):
     return y[:rows, :d].reshape(*lead, d)
 
 
+# Row statistics are per-row: shard the leading (token/batch) axis, keep
+# the feature dim whole and the scale vector replicated.  The ``...`` lets
+# one template serve both the 2-D (rows, d) kernel call and the 3-D
+# (B, S, d) model call.
+_ROWWISE = Partitioning(in_axes=(("batch", ..., None), (None,)),
+                        out_axes=("batch", ..., None))
+_ROWWISE_GATED = Partitioning(
+    in_axes=(("batch", ..., None), ("batch", ..., None), (None,)),
+    out_axes=("batch", ..., None))
+
+
 @register_kernel("rmsnorm", signature=StreamSignature(n_read=2, n_write=1),
                  ref=lambda x, scale, *, eps=1e-6: ref.rmsnorm(x, scale, eps),
-                 plan_args=_plan_args_plain)
+                 plan_args=_plan_args_plain, partitioning=_ROWWISE)
 def _launch_rmsnorm(plan, x, scale, *, eps: float = 1e-6):
     """y = x * rsqrt(mean(x^2) + eps) * scale, fused over row blocks."""
     return _rmsnorm(x, scale, plan=plan, eps=eps)
@@ -74,7 +86,7 @@ def _launch_rmsnorm(plan, x, scale, *, eps: float = 1e-6):
                  signature=StreamSignature(n_read=3, n_write=1),
                  ref=lambda x, z, scale, *, eps=1e-6:
                      ref.gated_rmsnorm(x, z, scale, eps),
-                 plan_args=_plan_args_gated)
+                 plan_args=_plan_args_gated, partitioning=_ROWWISE_GATED)
 def _launch_gated(plan, x, z, scale, *, eps: float = 1e-6):
     """Gated variant: normalize x * silu(z) (mamba2/xlstm norm path)."""
     return _gated(x, z, scale, plan=plan, eps=eps)

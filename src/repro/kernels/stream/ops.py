@@ -16,6 +16,7 @@ import jax
 
 from repro.api import dispatch
 from repro.api.registry import register_kernel
+from repro.api.spmd import Partitioning
 from repro.core.autotune import StreamSignature
 from repro.core.planner import KernelPlan
 from repro.kernels._shims import deprecated_wrapper
@@ -49,8 +50,15 @@ def _triad(b, c, s, *, plan):
     return from_tiles(kernel.triad2d(b2, c2, s, brows=plan.block_rows), n)
 
 
+# 1-D streams are embarrassingly batch-parallel: shard the vector over
+# the data axis, each device runs the planned kernel on its slice.
+_ELEMENTWISE_1D = lambda n: Partitioning(
+    in_axes=(("batch",),) * n, out_axes=("batch",))
+
+
 @register_kernel("stream.copy", signature=StreamSignature(n_read=1, n_write=1),
-                 ref=lambda a: ref.copy(a), plan_args=plan_args_1d)
+                 ref=lambda a: ref.copy(a), plan_args=plan_args_1d,
+                 partitioning=_ELEMENTWISE_1D(1))
 def _launch_copy(plan, a):
     """C = A, streamed as whole (sublane, 128) tiles."""
     return _copy(a, plan=plan)
@@ -58,14 +66,16 @@ def _launch_copy(plan, a):
 
 @register_kernel("stream.scale",
                  signature=StreamSignature(n_read=1, n_write=1),
-                 ref=lambda c, *, s: ref.scale(c, s), plan_args=plan_args_1d)
+                 ref=lambda c, *, s: ref.scale(c, s), plan_args=plan_args_1d,
+                 partitioning=_ELEMENTWISE_1D(1))
 def _launch_scale(plan, c, *, s):
     """B = s * C."""
     return _scale(c, s, plan=plan)
 
 
 @register_kernel("stream.add", signature=StreamSignature(n_read=2, n_write=1),
-                 ref=lambda a, b: ref.add(a, b), plan_args=plan_args_1d)
+                 ref=lambda a, b: ref.add(a, b), plan_args=plan_args_1d,
+                 partitioning=_ELEMENTWISE_1D(2))
 def _launch_add(plan, a, b):
     """C = A + B."""
     return _add(a, b, plan=plan)
@@ -74,7 +84,8 @@ def _launch_add(plan, a, b):
 @register_kernel("stream.triad",
                  signature=StreamSignature(n_read=2, n_write=1),
                  ref=lambda b, c, *, s: ref.triad(b, c, s),
-                 plan_args=plan_args_1d)
+                 plan_args=plan_args_1d,
+                 partitioning=_ELEMENTWISE_1D(2))
 def _launch_triad(plan, b, c, *, s):
     """A = B + s * C (the paper's bandwidth headline)."""
     return _triad(b, c, s, plan=plan)

@@ -19,6 +19,7 @@ import jax.numpy as jnp
 
 from repro.api import dispatch
 from repro.api.registry import register_kernel
+from repro.api.spmd import Partitioning
 from repro.core.autotune import StreamSignature
 from repro.core.planner import KernelPlan
 from repro.core.segmented import SegmentedArray, seg_map
@@ -37,7 +38,11 @@ def _triad(b, c, d, *, plan):
 
 @register_kernel("triad", signature=StreamSignature(n_read=3, n_write=1),
                  ref=lambda b, c, d: ref.triad(b, c, d),
-                 plan_args=plan_args_1d)
+                 plan_args=plan_args_1d,
+                 # elementwise over the vector: shard it over the data
+                 # axis, each device triads its own slice
+                 partitioning=Partitioning(in_axes=(("batch",),) * 3,
+                                           out_axes=("batch",)))
 def _launch_triad(plan, b, c, d):
     """Schoenauer vector triad A = B + C * D (paper SS2.2)."""
     return _triad(b, c, d, plan=plan)

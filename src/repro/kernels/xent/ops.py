@@ -12,6 +12,7 @@ import jax.numpy as jnp
 
 from repro.api import dispatch
 from repro.api.registry import register_kernel
+from repro.api.spmd import SCALAR, Partitioning
 from repro.core.autotune import StreamSignature
 from repro.core.layout import round_up
 from repro.kernels._shims import deprecated_wrapper
@@ -38,7 +39,14 @@ def _xent_padded(logits, labels, *, logical_v, tp, vp, bt, bv):
 
 
 @register_kernel("xent", signature=StreamSignature(n_read=2, n_write=1),
-                 ref=_ref, plan_args=_plan_args, col_tiled=True)
+                 ref=_ref, plan_args=_plan_args, col_tiled=True,
+                 # Tokens shard over the batch axes; the vocab dim stays
+                 # whole per shard (the online softmax needs the full row).
+                 # Each shard's mean NLL covers its own tokens, so equal
+                 # shards combine exactly with a pmean.
+                 partitioning=Partitioning(
+                     in_axes=(("batch", None), ("batch",)),
+                     out_axes=SCALAR, reduce="mean"))
 def _launch_xent(plan, logits, labels, *, logical_v: int = 0):
     """Mean NLL over (T,) tokens; the plan's (block_rows, block_cols) is the
     online-softmax working set, (T, V) padded to the planned physical

@@ -20,7 +20,9 @@ def main() -> None:
     ap.add_argument("--gen", type=int, default=24)
     ap.add_argument("--plan-profile", default=None,
                     help="measured plan profile (repro.measure.sweep output);"
-                         " its swept cells override the analytic planner")
+                         " its swept cells override the analytic planner"
+                         " (on an SPMD mesh, cells match per-shard local"
+                         " shapes -- see docs/SPMD.md)")
     args = ap.parse_args()
 
     import jax
@@ -43,7 +45,8 @@ def main() -> None:
 
     # Ambient PlanContext: the decode path's kernels (and the plan report
     # below) all see the serving mesh -- and any measured profile cells --
-    # without per-call plumbing.
+    # without per-call plumbing.  On a multi-device mesh the registered
+    # kernels launch through shard_map with per-shard plans (api.spmd).
     # No --plan-profile leaves plan_overrides unspecified: an explicit None
     # would *clear* pins inherited from the process-default context.
     ctx_kw = {}
@@ -54,6 +57,8 @@ def main() -> None:
         print(f"plan profile {args.plan_profile}: "
               f"{len(ctx_kw['plan_overrides'])} swept cell(s)")
     with api.plan_context(mesh=mesh, **ctx_kw):
+        if api.spmd_mesh() is not None:
+            print("kernel launch path: fused shard_map (SPMD)")
         model = build_model(cfg)
         params = model.init(jax.random.PRNGKey(0))
         max_len = args.prompt_len + args.gen

@@ -31,7 +31,9 @@ def main() -> None:
                     help="skip the layout policy (paper-raw dims)")
     ap.add_argument("--plan-profile", default=None,
                     help="measured plan profile (repro.measure.sweep output);"
-                         " its swept cells override the analytic planner")
+                         " its swept cells override the analytic planner"
+                         " (on an SPMD mesh, cells match per-shard local"
+                         " shapes -- see docs/SPMD.md)")
     args = ap.parse_args()
     logging.basicConfig(level=logging.INFO,
                         format="%(asctime)s %(name)s %(message)s")
@@ -89,9 +91,13 @@ def main() -> None:
     )
     # One ambient PlanContext for the whole run: every kernel launched by a
     # train step now plans against the production mesh (shard-aligned
-    # physical shapes) without any per-call plumbing.  A measured profile
-    # (repro.measure.sweep) overrides the analytic choice cell by cell.
-    plan_mesh = mesh if tp > 1 else None
+    # physical shapes) without any per-call plumbing -- and on a
+    # multi-device mesh api.launch routes the registered kernels through
+    # shard_map with per-shard plans (repro.api.spmd), so the fused
+    # norm/loss paths survive SPMD lowering instead of falling back to jnp.
+    # A measured profile (repro.measure.sweep) overrides the analytic
+    # choice cell by cell.
+    plan_mesh = mesh if mesh.size > 1 else None
     # No --plan-profile leaves plan_overrides unspecified: an explicit None
     # would *clear* pins inherited from the process-default context.
     ctx_kw = {}
@@ -103,6 +109,12 @@ def main() -> None:
                      args.plan_profile, len(ctx_kw["plan_overrides"]))
     with api.plan_context(mesh=plan_mesh, **ctx_kw), \
             rules_lib.use_rules(rules, mesh=plan_mesh):
+        from repro.models import blocks
+
+        logging.info("kernel launch path: %s",
+                     "fused shard_map (SPMD)" if api.spmd_mesh() is not None
+                     else "fused single-device" if blocks.use_fused_kernels()
+                     else "jnp fallback")
         metrics = trainer.train(jax.random.PRNGKey(0))
     print(f"done: {len(metrics)} steps, "
           f"loss {metrics[0]['loss']:.3f} -> {metrics[-1]['loss']:.3f}")

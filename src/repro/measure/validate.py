@@ -211,7 +211,9 @@ def write_report(records: list[dict], out: str) -> None:
     """Merge ``records`` into ``out`` (same-kernel records update in
     place, like the dry-run driver)."""
     existing: list[dict] = []
-    if os.path.exists(out):
+    # A zero-size file is "nothing here yet", not corruption: mktemp (the
+    # tier-1 script's per-run report path) creates the file it names.
+    if os.path.exists(out) and os.path.getsize(out) > 0:
         with open(out) as f:
             doc = json.load(f)
             if doc.get("format") == VALIDATION_FORMAT:

@@ -33,13 +33,24 @@ def norm_defs(cfg: ModelConfig, d: int | None = None) -> dict:
 def use_fused_kernels() -> bool:
     """Whether model hot paths route through ``repro.api.launch``.
 
-    Single-device programs launch the registered Pallas kernels, so the
-    ambient ``PlanContext`` (mesh, sublane policy, swept ``plan_overrides``)
-    governs the model forward pass too.  Multi-device SPMD lowering keeps
-    the pure-jnp path: a ``pallas_call`` carries no partitioning rule, and
-    the Megatron-style loss must stay vocab-parallel.  Device count is
-    fixed per process, so every trace in one program picks one path."""
-    return jax.device_count() == 1
+    Single-device programs always launch the registered Pallas kernels, so
+    the ambient ``PlanContext`` (mesh, sublane policy, swept
+    ``plan_overrides``) governs the model forward pass too.  Multi-device
+    programs launch them when the ambient context carries a real
+    multi-device ``jax.sharding.Mesh``: ``api.launch`` then partitions the
+    kernel over the mesh via shard_map using its registered
+    ``Partitioning``, with each shard planning its own local block shape
+    (``repro.api.spmd``).  Without such a mesh -- or inside an existing
+    shard_map body (pipeline stages), or under ``plan_context(spmd=False)``
+    -- the pure-jnp path keeps the program partitionable, since a bare
+    ``pallas_call`` carries no partitioning rule.  The answer is resolved
+    at trace time, so one process can trace both paths under different
+    contexts."""
+    if jax.device_count() == 1:
+        return True
+    from repro.api import spmd  # lazy, mirroring the _rms_fused imports
+
+    return spmd.spmd_mesh() is not None
 
 
 def _rms_ref(x: jax.Array, scale: jax.Array, eps: float) -> jax.Array:

@@ -277,12 +277,21 @@ def lm_loss(logits: jax.Array, labels: jax.Array, cfg: ModelConfig,
     logits for a 152k vocab would cost ~40 GB/device -- this is the layout
     policy applied to the loss.
 
-    On a single device the unmasked case launches the registered ``xent``
-    Pallas kernel through ``repro.api`` (tiled online softmax under the
-    ambient plan policy; ``Trainer.plan_hot_kernels`` pins its plan).  The
-    masked and multi-device SPMD cases keep the jnp path -- a masked mean
-    cannot be recovered from the kernel's all-token mean, and the sharded
-    loss must stay vocab-parallel (see ``blocks.use_fused_kernels``).
+    The unmasked case launches the registered ``xent`` Pallas kernel
+    through ``repro.api`` (tiled online softmax under the ambient plan
+    policy; ``Trainer.plan_hot_kernels`` pins its plan) -- on one device
+    directly, and on a multi-device program whenever the ambient context
+    carries a real Mesh: ``api.launch`` then shard_maps the kernel with
+    tokens split over the batch mesh axes, each shard running the online
+    softmax over its own tokens at a locally planned block shape and a
+    ``pmean`` combining the equal-sized shard means (``repro.api.spmd``).
+    Within each token shard the vocab axis is whole -- the SPMD fused path
+    trades the Megatron vocab-parallel layout for the fused kernel, which
+    is the right trade below the ~40 GB/device logits regime and refused
+    above it by simply not setting an SPMD mesh.  The masked case (and a
+    meshless multi-device program) keeps the jnp path -- a masked mean
+    cannot be recovered from the kernel's all-token mean (see
+    ``blocks.use_fused_kernels``).
     """
     v = logits.shape[-1]
     logical = getattr(cfg, "vocab_logical", 0) or cfg.vocab_size

@@ -74,10 +74,13 @@ def current_rules() -> Mapping[str, AxisTarget] | None:
     return _active.get()
 
 
-def _divisible(dim: int, target: AxisTarget) -> bool:
+def _divisible(dim: int, target: AxisTarget,
+               axis_sizes: Mapping[str, int] | None = None) -> bool:
     """True when ``dim`` can be evenly sharded over the mapped mesh axes.
-    Unknown axis sizes (no mesh registered) are assumed fine."""
-    sizes = _axis_sizes.get()
+    ``axis_sizes`` overrides the sizes registered via ``use_rules`` (the SPMD
+    launch path passes its mesh's sizes explicitly so the check works even
+    outside any rules context).  Unknown axis sizes are assumed fine."""
+    sizes = axis_sizes if axis_sizes is not None else _axis_sizes.get()
     if sizes is None or target is None:
         return True
     axes = (target,) if isinstance(target, str) else tuple(target)
@@ -85,6 +88,23 @@ def _divisible(dim: int, target: AxisTarget) -> bool:
     for a in axes:
         n *= sizes.get(a, 1)
     return dim % n == 0
+
+
+def restrict_to_mesh(rules: Mapping[str, AxisTarget], mesh) -> dict[str, AxisTarget]:
+    """A copy of ``rules`` with every target filtered to axes ``mesh``
+    actually has.  A table written for the production ("data", "model") mesh
+    then still yields valid PartitionSpecs on a test mesh with fewer (or
+    renamed) axes -- missing axes simply fall back to replication."""
+    names = set(mesh.axis_names)
+    out: dict[str, AxisTarget] = {}
+    for k, tgt in rules.items():
+        if tgt is None:
+            out[k] = None
+            continue
+        axes = (tgt,) if isinstance(tgt, str) else tuple(tgt)
+        kept = tuple(a for a in axes if a in names)
+        out[k] = (kept if len(kept) > 1 else kept[0]) if kept else None
+    return out
 
 
 def make_rules(
@@ -117,13 +137,15 @@ def make_rules(
 
 
 def spec(*axes: str | None, rules: Mapping[str, AxisTarget] | None = None,
-         shape: tuple[int, ...] | None = None) -> P:
+         shape: tuple[int, ...] | None = None,
+         axis_sizes: Mapping[str, int] | None = None) -> P:
     """PartitionSpec for a tuple of logical axis names.
 
-    When ``shape`` is given (and a mesh is registered via use_rules), any
-    dimension that is not evenly divisible by its mapped mesh axes falls
-    back to replication -- the GSPMD-pragmatic baseline the layout policy
-    then improves on by padding (EXPERIMENTS.md SSPerf).
+    When ``shape`` is given (and a mesh is registered via use_rules, or
+    ``axis_sizes`` passes mesh axis sizes explicitly), any dimension that is
+    not evenly divisible by its mapped mesh axes falls back to replication
+    -- the GSPMD-pragmatic baseline the layout policy then improves on by
+    padding (EXPERIMENTS.md SSPerf).
     """
     rules = rules if rules is not None else (current_rules() or {})
     parts = []
@@ -131,7 +153,7 @@ def spec(*axes: str | None, rules: Mapping[str, AxisTarget] | None = None,
     for i, ax in enumerate(axes):
         tgt = rules.get(ax) if ax is not None else None
         if tgt is not None and shape is not None and not _divisible(
-            shape[i], tgt
+            shape[i], tgt, axis_sizes
         ):
             tgt = None
         if tgt is not None:
@@ -141,7 +163,7 @@ def spec(*axes: str | None, rules: Mapping[str, AxisTarget] | None = None,
             used.update(names)
             tgt = names or None
             if tgt is not None and shape is not None and not _divisible(
-                shape[i], tgt
+                shape[i], tgt, axis_sizes
             ):
                 tgt = None
         if tgt is None:

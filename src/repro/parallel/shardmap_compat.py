@@ -5,10 +5,16 @@ Two things moved across jax versions: the import location (jax >= 0.8 has
 the replication-check kwarg (``check_rep`` renamed to ``check_vma``).
 ``NO_CHECK`` is the kwargs dict that disables the check under whichever
 name this jax accepts.
+
+``inside_shard_map`` answers "am I already under a mapped trace?" -- the
+guard ``api.spmd`` uses so the SPMD kernel-launch path never nests a
+``shard_map`` inside a pipeline stage (or pmap body) that is itself one.
 """
 from __future__ import annotations
 
 import inspect
+
+import jax
 
 try:  # jax >= 0.8
     from jax import shard_map
@@ -22,4 +28,20 @@ NO_CHECK = (
     else {}
 )
 
-__all__ = ["shard_map", "NO_CHECK"]
+
+def inside_shard_map() -> bool:
+    """True when called under an active mapped trace (a shard_map or pmap
+    body binds its mesh axis names into the axis environment; plain jit does
+    not).  Best-effort across jax versions: when no probe is available the
+    answer is False, which only costs the caller a nested-shard_map error
+    it would have hit anyway."""
+    probe = getattr(jax.core, "nonempty_axis_env_DO_NOT_USE", None)
+    if probe is not None:
+        return bool(probe())
+    names = getattr(jax.core, "unsafe_get_axis_names_DO_NOT_USE", None)
+    if names is not None:  # pragma: no cover - version-dependent fallback
+        return bool(names())
+    return False  # pragma: no cover
+
+
+__all__ = ["shard_map", "NO_CHECK", "inside_shard_map"]
