@@ -84,6 +84,18 @@ PLAN_CASES = [
     ("xent", (4096, 122753), "float32"),
 ]
 
+# Per-shard cells for the communicating SPMD families (vocab-parallel xent,
+# halo-exchange jacobi) under a nominal 2x4 data/model mesh: the *local*
+# plan carries predicted_comm_bytes (halo rows / lse psum payloads), the
+# number `repro.measure.validate --comm` checks against the collective
+# census.  Shapes are the PLAN_CASES globals divided by the mesh (vocab
+# 122752 = 4096-aligned so the Megatron split engages).
+SPMD_MESH = {"data": 2, "model": 4}
+SPMD_LOCAL_CASES = [
+    ("jacobi", (2000, 4000), "float32"),
+    ("xent", (2048, 30688), "float32"),
+]
+
 
 def _validation_by_kernel(path: str = "results/validation.json") -> dict:
     """Measured records from ``repro.measure.validate`` keyed by kernel
@@ -118,7 +130,8 @@ def planner_rows(validation_path: str = "results/validation.json"
             f"balance={p.predicted_balance:.2f};naive={p.naive_balance:.2f};"
             f"waste={p.waste:.4f};sublanes={p.sublanes};"
             f"block={'x'.join(str(b) for b in p.block_shape)};"
-            f"pred_bytes={p.predicted_hbm_bytes}"
+            f"pred_bytes={p.predicted_hbm_bytes};"
+            f"pred_comm={p.predicted_comm_bytes}"
         )
         rec = measured.get(kernel)
         if rec is None:
@@ -130,6 +143,18 @@ def planner_rows(validation_path: str = "results/validation.json"
                 f"envelope={rec['status']}"
             )
         out.append((f"plan.{kernel}", 0.0, info))
+    mesh_tag = "x".join(str(SPMD_MESH[a]) for a in ("data", "model"))
+    for kernel, shape, dtype in SPMD_LOCAL_CASES:
+        with api.plan_context(mesh=dict(SPMD_MESH)):
+            p = api.plan_for(kernel, shape, dtype, local=True)
+        out.append((
+            f"plan.{kernel}@spmd{mesh_tag}", 0.0,
+            f"local_shape={'x'.join(str(s) for s in shape)};"
+            f"block={'x'.join(str(b) for b in p.block_shape)};"
+            f"pred_bytes={p.predicted_hbm_bytes};"
+            f"pred_comm={p.predicted_comm_bytes};"
+            f"comm_frac={p.predicted_comm_bytes / max(p.predicted_hbm_bytes, 1):.2e}",
+        ))
     return out
 
 
@@ -169,3 +194,6 @@ if __name__ == "__main__":
 
     for kernel, shape, dtype in PLAN_CASES:
         print(api.explain(kernel, shape, dtype))
+    for kernel, shape, dtype in SPMD_LOCAL_CASES:
+        with api.plan_context(mesh=dict(SPMD_MESH)):
+            print(api.plan_for(kernel, shape, dtype, local=True).explain())

@@ -110,9 +110,11 @@ def launch(kernel: str, *arrays, plan: KernelPlan | None = None, **scalars):
     if plan is None:
         mesh = spmd_lib.spmd_mesh()
         if mesh is not None:
-            # plan_args is not derived here: the shard body re-derives it
-            # from each shard's local arrays (validation included).
-            _warn_spmd_shadowed_overrides(entry.name)
+            # plan_args is not derived for planning here: the shard body
+            # re-derives it from each shard's local arrays (validation
+            # included).  The warning helper derives the *global* shape
+            # only to tell shadowed override cells from live local ones.
+            _warn_spmd_shadowed_overrides(entry, mesh, arrays, scalars)
             return spmd_lib.spmd_launch(entry, mesh, arrays, scalars)
     shape, dtype = entry.plan_args(*arrays, **scalars)
     if plan is None:
@@ -121,28 +123,48 @@ def launch(kernel: str, *arrays, plan: KernelPlan | None = None, **scalars):
     return entry.body(plan, *arrays, **scalars)
 
 
-_SPMD_OVERRIDE_WARNED: set[str] = set()
+_SPMD_OVERRIDE_WARNED: set[tuple] = set()
 
 
-def _warn_spmd_shadowed_overrides(kernel: str) -> None:
+def _warn_spmd_shadowed_overrides(entry, mesh, arrays, scalars) -> None:
     """Under the SPMD route, plans resolve inside the shard body against
     *local* shapes -- so a profile swept at global shapes (or a bare-name
-    pin recorded at a global shape) silently never matches.  Say so once
-    per kernel instead of letting --plan-profile look active but be inert
-    (sweep at per-shard shapes to pin plans on SPMD runs)."""
+    pin recorded at the global shape) silently never matches.  Say so once
+    per (kernel, mesh) -- the same override set can be live on one mesh's
+    shard shapes and inert on another's -- naming the offending cell keys,
+    instead of letting --plan-profile look active but be inert.  Override
+    cells keyed at any *other* shape are assumed to be per-shard local
+    cells (the documented SPMD sweep workflow) and do not warn."""
     ctx = context_lib.current_context()
-    has_override = kernel in ctx.plan_overrides or any(
-        isinstance(k, tuple) and k and k[0] == kernel
-        for k in ctx.plan_overrides
+    keys = [k for k in ctx.plan_overrides
+            if k == entry.name
+            or (isinstance(k, tuple) and k and k[0] == entry.name)]
+    if not keys:
+        return
+    gshape = tuple(int(s) for s in entry.plan_args(*arrays, **scalars)[0])
+    offending = sorted(
+        str(k) for k in keys
+        if (tuple(ctx.plan_overrides[k].logical_shape) == gshape
+            if k == entry.name else tuple(k[1]) == gshape)
     )
-    if has_override and kernel not in _SPMD_OVERRIDE_WARNED:
-        _SPMD_OVERRIDE_WARNED.add(kernel)
-        warnings.warn(
-            f"plan override(s) for {kernel!r} under an SPMD mesh: overrides "
-            f"are matched against per-shard *local* shapes inside shard_map, "
-            f"so cells keyed on global shapes will not apply",
-            RuntimeWarning, stacklevel=3,
-        )
+    if not offending:
+        return
+    mesh_key = (entry.name, tuple(mesh.axis_names),
+                tuple(mesh.devices.shape))
+    if mesh_key in _SPMD_OVERRIDE_WARNED:
+        return
+    _SPMD_OVERRIDE_WARNED.add(mesh_key)
+    mesh_desc = dict(zip(tuple(mesh.axis_names), tuple(mesh.devices.shape)))
+    warnings.warn(
+        f"plan override(s) for {entry.name!r} under SPMD mesh {mesh_desc}: "
+        f"overrides are matched against per-shard *local* shapes inside "
+        f"shard_map, and these cell key(s) are keyed at the launch's "
+        f"global shape {gshape} -- they will be inert unless a shard's "
+        f"local shape coincides with it (offending cell key(s): "
+        f"{', '.join(offending)}). Sweep at the per-shard shapes to pin "
+        f"plans on SPMD runs -- see docs/SPMD.md ('Per-shard planning')",
+        RuntimeWarning, stacklevel=3,
+    )
 
 
 def ref(kernel: str, *arrays, **scalars):

@@ -64,6 +64,11 @@ class KernelEntry:
     plan_args: Callable      # (*arrays, **scalars) -> (shape, dtype)
     body: Callable           # (plan, *arrays, **scalars) -> result
     partitioning: Partitioning | None = None  # SPMD rule (None = replicated)
+    # Kernel-owned shard_map body: (ShardContext, *local, **scalars) -> out.
+    # Declared by kernels whose partitioning needs cross-shard communication
+    # (xent's lse combine, jacobi's halo exchange); None = the generic
+    # plan-locally-and-launch body in ``repro.api.spmd``.
+    spmd_body: Callable | None = None
     doc: str = ""
 
 
@@ -77,6 +82,7 @@ def register_kernel(
     ref: Callable,
     plan_args: Callable,
     partitioning: Partitioning | None = None,
+    spmd_body: Callable | None = None,
     vmem_buffers: int | None = None,
     col_tiled: bool = False,
     doc: str = "",
@@ -86,7 +92,10 @@ def register_kernel(
     ``vmem_buffers``/``col_tiled`` feed the planner's block-geometry tables
     (see ``core.planner.register_family``).  ``partitioning`` is the SPMD
     placement rule (``repro.api.spmd.Partitioning``); omitted, the kernel
-    runs fully replicated under a multi-device mesh.
+    runs fully replicated under a multi-device mesh.  ``spmd_body`` is the
+    kernel-owned shard_map body for partitionings that communicate
+    (``repro.api.spmd.ShardContext`` first argument); it requires a
+    ``partitioning`` to shard anything in the first place.
     """
 
     def deco(body: Callable) -> Callable:
@@ -111,6 +120,11 @@ def register_kernel(
                 f"repro.api.spmd.Partitioning, got "
                 f"{type(partitioning).__name__}"
             )
+        if spmd_body is not None and partitioning is None:
+            raise TypeError(
+                f"kernel {name!r}: spmd_body without a partitioning is "
+                f"unreachable -- declare which axes shard first"
+            )
         planner_lib.register_family(name, signature,
                                     vmem_buffers=vmem_buffers,
                                     col_tiled=col_tiled)
@@ -121,6 +135,7 @@ def register_kernel(
             plan_args=plan_args,
             body=body,
             partitioning=partitioning,
+            spmd_body=spmd_body,
             doc=doc or (body.__doc__ or "").strip(),
         )
         return body

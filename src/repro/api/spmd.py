@@ -27,10 +27,28 @@ routes through ``shard_map``:
     for xent's token-mean NLL), applied with ``pmean``/``psum`` over the
     mesh axes the sharded operand axes actually mapped to.
 
-Kernels whose access pattern couples neighboring sites (jacobi's halo
-rows, LBM's streaming shifts) declare themselves ``replicated``: every
-device computes the full array -- correct, and it keeps one launch path
-instead of a per-kernel fallback maze.
+Kernels whose access pattern couples neighboring sites across a split can
+still partition -- they declare a ``spmd_body`` alongside their
+``Partitioning`` and own the cross-shard communication themselves
+(``ShardContext`` hands them the mesh axes each operand dim actually
+mapped to):
+
+  * xent shards the *vocab* axis (Megatron layout) and combines the
+    per-shard online-softmax partials with a cross-shard log-sum-exp:
+    ``pmax`` of the per-shard max, ``psum`` of the rescaled sum-exp and of
+    the locally-gathered target logit -- three token-length fp32 vectors on
+    the wire instead of a replicated (T, V) logits array;
+  * jacobi shards its grid rows and ``ppermute``s one-row halos (up and
+    down) before launching the same Pallas stencil on the locally planned
+    block shape.
+
+The planner prices this traffic (``KernelPlan.predicted_comm_bytes``) so
+``repro.measure.validate --comm`` can check the lowered program's
+collective census against the model.  A declared sharding that cannot
+apply (vocab % mesh != 0) falls back to replication with a logged reason
+(``rules.spec_report``).  Kernels with neither a safe split nor a
+``spmd_body`` (LBM's streaming shifts) stay ``replicated()``: every device
+computes the full array.
 
 The path never nests: inside an existing shard_map/pmap body (pipeline
 stages) ``spmd_mesh`` returns None and ``launch`` stays single-device.
@@ -39,6 +57,8 @@ stages) ``spmd_mesh`` returns None and ``launch`` stays single-device.
 from __future__ import annotations
 
 import dataclasses
+import logging
+from typing import Mapping
 
 import jax
 from jax.sharding import PartitionSpec as P
@@ -48,7 +68,9 @@ from repro.parallel import rules as rules_lib
 from repro.parallel.shardmap_compat import NO_CHECK, inside_shard_map, shard_map
 
 __all__ = ["Partitioning", "SCALAR", "replicated", "partitioning_for",
-           "spmd_mesh", "spmd_launch"]
+           "spmd_mesh", "spmd_launch", "ShardContext", "shard_specs"]
+
+_log = logging.getLogger(__name__)
 
 # Sentinel out_axes: the kernel reduces to a scalar (rank-0) result.
 SCALAR = "scalar"
@@ -135,6 +157,79 @@ def _expand(template, ndim: int) -> tuple:
     return t
 
 
+def _dim_axes(spec: P, ndim: int) -> tuple[tuple[str, ...], ...]:
+    """Per-dimension mesh axis names of a PartitionSpec, padded to rank."""
+    parts = tuple(spec)
+    out = []
+    for d in range(ndim):
+        p = parts[d] if d < len(parts) else None
+        if p is None:
+            out.append(())
+        elif isinstance(p, str):
+            out.append((p,))
+        else:
+            out.append(tuple(p))
+    return tuple(out)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardContext:
+    """What a kernel's ``spmd_body`` needs to know about its placement.
+
+    operand_axes:
+        per operand, per dimension: the tuple of mesh axis names that
+        dimension was actually sharded over (empty = whole on this shard --
+        either declared replicated or a divisibility fallback).
+    axis_sizes:
+        ``{mesh axis: size}`` for the launch mesh.
+    """
+
+    operand_axes: tuple[tuple[tuple[str, ...], ...], ...]
+    axis_sizes: Mapping[str, int]
+
+    def axes(self, operand: int = 0, dim: int = 0) -> tuple[str, ...]:
+        return self.operand_axes[operand][dim]
+
+    def size(self, axes: tuple[str, ...]) -> int:
+        """Number of shards along ``axes`` (1 when unsharded)."""
+        n = 1
+        for a in axes:
+            n *= int(self.axis_sizes.get(a, 1))
+        return n
+
+    def index(self, axes: tuple[str, ...]):
+        """This shard's linear index along ``axes`` (traced; 0 when
+        unsharded), row-major over the axis tuple like the sharding is."""
+        idx = 0
+        for a in axes:
+            idx = idx * int(self.axis_sizes.get(a, 1)) + jax.lax.axis_index(a)
+        return idx
+
+
+def shard_specs(mesh, templates, arrays):
+    """Build ``(in_specs, operand_axes, axis_sizes, fallbacks)`` for axis
+    ``templates`` over ``arrays`` under the ambient (or default) rules,
+    restricted to ``mesh``.  Shared by ``spmd_launch`` and kernel-owned
+    shard_maps (xent's vocab-parallel backward)."""
+    table = rules_lib.restrict_to_mesh(
+        rules_lib.current_rules() or rules_lib.DEFAULT_RULES, mesh
+    )
+    sizes = dict(zip(tuple(mesh.axis_names), tuple(mesh.devices.shape)))
+    in_specs = []
+    fallbacks: list[str] = []
+    for t, a in zip(templates, arrays):
+        s, fb = rules_lib.spec_report(
+            *_expand(t, a.ndim), rules=table,
+            shape=tuple(int(x) for x in a.shape), axis_sizes=sizes)
+        in_specs.append(s)
+        fallbacks.extend(fb)
+    in_specs = tuple(in_specs)
+    operand_axes = tuple(
+        _dim_axes(s, a.ndim) for s, a in zip(in_specs, arrays)
+    )
+    return in_specs, operand_axes, sizes, fallbacks
+
+
 def _spec_mesh_axes(spec: P) -> tuple[str, ...]:
     """Every mesh axis name appearing in a PartitionSpec, in order."""
     names: list[str] = []
@@ -171,14 +266,43 @@ def spmd_mesh(ctx: "context_lib.PlanContext | None" = None):
     return mesh
 
 
+_FALLBACK_LOGGED: set[tuple] = set()
+
+
+def _log_fallbacks(entry, mesh, arrays, fallbacks) -> None:
+    """Record (once per kernel/shapes/mesh) every declared sharding that
+    fell back to replication -- the vocab-parallel rule silently degrading
+    to full-vocab shards is a real perf cliff, not an implementation
+    detail.  See docs/SPMD.md ('Communication-minimal partitionings')."""
+    if not fallbacks:
+        return
+    key = (entry.name,
+           tuple(tuple(int(s) for s in a.shape) for a in arrays),
+           tuple(mesh.axis_names), tuple(mesh.devices.shape))
+    if key in _FALLBACK_LOGGED:
+        return
+    _FALLBACK_LOGGED.add(key)
+    _log.info(
+        "SPMD launch of %r over mesh %s: declared partitioning partially "
+        "replicated (%s) -- see docs/SPMD.md",
+        entry.name,
+        dict(zip(tuple(mesh.axis_names), tuple(mesh.devices.shape))),
+        "; ".join(fallbacks),
+    )
+
+
 def spmd_launch(entry, mesh, arrays, scalars):
     """Launch ``entry`` on ``arrays`` partitioned over ``mesh``.
 
     Builds in/out specs from the kernel's declaration under the ambient
-    (or default) sharding rules, then shard_maps a body that plans each
-    shard's *local* block shape and runs the registered Pallas body on it.
-    Scalar kwargs (eps, omega, ...) close over the body; array-valued
-    options ride along replicated.
+    (or default) sharding rules, then shard_maps a body over them.  A
+    kernel that registered an ``spmd_body`` owns its shard body -- it
+    receives a ``ShardContext`` (which mesh axes each operand dim actually
+    mapped to) and performs its own halo exchange / cross-shard combine.
+    Otherwise the generic body plans each shard's *local* block shape, runs
+    the registered Pallas body on it, and applies the declared scalar
+    reduce.  Scalar kwargs (eps, omega, ...) close over the body;
+    array-valued options ride along replicated.
     """
     part = partitioning_for(entry, len(arrays))
     if len(part.in_axes) != len(arrays):
@@ -186,16 +310,10 @@ def spmd_launch(entry, mesh, arrays, scalars):
             f"{entry.name}: partitioning declares {len(part.in_axes)} "
             f"operand(s), launch got {len(arrays)}"
         )
-    table = rules_lib.restrict_to_mesh(
-        rules_lib.current_rules() or rules_lib.DEFAULT_RULES, mesh
+    in_specs, operand_axes, sizes, fallbacks = shard_specs(
+        mesh, part.in_axes, arrays
     )
-    sizes = dict(zip(tuple(mesh.axis_names), tuple(mesh.devices.shape)))
-    in_specs = tuple(
-        rules_lib.spec(*_expand(t, a.ndim), rules=table,
-                       shape=tuple(int(s) for s in a.shape),
-                       axis_sizes=sizes)
-        for t, a in zip(part.in_axes, arrays)
-    )
+    _log_fallbacks(entry, mesh, arrays, fallbacks)
     if part.out_axes == SCALAR:
         out_spec = P()
         # The local partial must be combined over every mesh axis the
@@ -203,23 +321,30 @@ def spmd_launch(entry, mesh, arrays, scalars):
         # full replication this is empty and the local result is global.
         reduce_axes = _spec_mesh_axes(in_specs[0])
     else:
-        out_spec = rules_lib.spec(
-            *_expand(part.out_axes, arrays[0].ndim), rules=table,
-            shape=tuple(int(s) for s in arrays[0].shape), axis_sizes=sizes)
+        # The output is shaped like operand 0, so its spec derives the
+        # same way the inputs' did (same rules table, same divisibility).
+        (out_spec,), _, _, _ = shard_specs(
+            mesh, (part.out_axes,), (arrays[0],))
         reduce_axes = ()
 
-    def _shard_body(*local):
-        from repro.api import dispatch  # lazy: dispatch imports this module
+    if entry.spmd_body is not None:
+        ctx = ShardContext(operand_axes=operand_axes, axis_sizes=sizes)
 
-        shape, dtype = entry.plan_args(*local, **scalars)
-        plan = dispatch.plan_for(entry.name, shape, dtype, local=True)
-        out = entry.body(plan, *local, **scalars)
-        if reduce_axes:
-            if part.reduce == "mean":
-                out = jax.lax.pmean(out, reduce_axes)
-            elif part.reduce == "sum":
-                out = jax.lax.psum(out, reduce_axes)
-        return out
+        def _shard_body(*local):
+            return entry.spmd_body(ctx, *local, **scalars)
+    else:
+        def _shard_body(*local):
+            from repro.api import dispatch  # lazy: dispatch imports this module
+
+            shape, dtype = entry.plan_args(*local, **scalars)
+            plan = dispatch.plan_for(entry.name, shape, dtype, local=True)
+            out = entry.body(plan, *local, **scalars)
+            if reduce_axes:
+                if part.reduce == "mean":
+                    out = jax.lax.pmean(out, reduce_axes)
+                elif part.reduce == "sum":
+                    out = jax.lax.psum(out, reduce_axes)
+            return out
 
     fn = shard_map(_shard_body, mesh=mesh, in_specs=in_specs,
                    out_specs=out_spec, **NO_CHECK)

@@ -122,6 +122,57 @@ MINOR_STREAM_BYTES: dict[str, Callable[[int, int, int], int]] = {
     "xent": lambda rows, width, eb: rows * 4 + rows * 4,
 }
 
+# ---------------------------------------------------------------------------
+# Predicted interconnect traffic (communication-minimal SPMD launches)
+# ---------------------------------------------------------------------------
+# Per-device wire bytes one SPMD launch of a *local* (per-shard) plan moves,
+# under the standard ring cost model (the same formulas
+# ``launch.lowering.collective_census`` applies to measured HLO):
+#
+#     all-reduce           2 (N-1)/N x payload
+#     collective-permute               payload
+#
+# The mesh-axis names are the ``parallel.rules.DEFAULT_RULES`` targets the
+# kernels' partitioning declarations resolve to ("batch" -> data, "vocab" ->
+# model); a launcher that renames its axes should keep the rule table in
+# sync.  The model assumes the declared partitioning engaged -- a
+# divisibility fallback to replication moves fewer bytes than predicted,
+# which the validation envelope absorbs.  Families absent here communicate
+# nothing (batch-parallel shards are independent).
+
+
+def _ring_all_reduce_bytes(payload: int, n: int) -> int:
+    return int(2 * (n - 1) / n * payload) if n > 1 else 0
+
+
+def _comm_jacobi(plan: "KernelPlan", sizes: Mapping[str, int]) -> int:
+    # One (1, cols) halo row ppermuted up and one down per sweep; the halo
+    # is exchanged at the logical column count (padding happens after the
+    # exchange, inside the shard).
+    d = sizes.get("data", 1)
+    if d <= 1:
+        return 0
+    return 2 * int(plan.logical_shape[-1]) * plan.elem_bytes
+
+
+def _comm_xent(plan: "KernelPlan", sizes: Mapping[str, int]) -> int:
+    # Vocab-parallel lse combine: pmax(m) + psum(l) + psum(label_logit),
+    # three fp32 vectors over the local token rows, all-reduced across the
+    # model axis; plus the 4-byte scalar pmean of the per-shard NLL over the
+    # batch axes.
+    mv = sizes.get("model", 1)
+    d = sizes.get("data", 1)
+    rows = int(plan.logical_shape[0])
+    total = _ring_all_reduce_bytes(3 * rows * 4, mv)
+    total += _ring_all_reduce_bytes(4, d)
+    return total
+
+
+COMM_MODEL: dict[str, Callable[["KernelPlan", Mapping[str, int]], int]] = {
+    "jacobi": _comm_jacobi,
+    "xent": _comm_xent,
+}
+
 
 def register_family(
     name: str,
@@ -189,6 +240,11 @@ class KernelPlan:
     naive_balance: float
     mesh: tuple[tuple[str, int], ...] = ()
     sublanes: int = SUBLANES
+    # True for a per-shard plan made by the SPMD launch path
+    # (``plan_for(..., local=True)``): the shape is one device's slice, the
+    # minor dim was not TP-re-widened, and ``predicted_comm_bytes`` below
+    # describes the shard's collectives.
+    local: bool = False
     # Where this plan came from: "analytic" (the planner's closed form) or a
     # measured source such as "sweep" / "profile:<path>" (see repro.measure).
     # Excluded from eq/hash: plans are jit-static arguments, and a
@@ -285,6 +341,21 @@ class KernelPlan:
         ``waste_bytes``."""
         return self._traffic_bytes(self.logical_elems, self.logical_shape)
 
+    @property
+    def predicted_comm_bytes(self) -> int:
+        """Analytic per-device interconnect traffic one SPMD launch of this
+        plan moves (ring cost model; see ``COMM_MODEL``).  Nonzero only for
+        *local* plans under a multi-axis mesh: a global plan describes the
+        single-device direct path, which communicates nothing.  This is the
+        number ``repro.measure.validate --comm`` checks against the
+        collective census of the lowered shard_map program."""
+        if not self.local or not self.mesh:
+            return 0
+        fn = COMM_MODEL.get(self.kernel)
+        if fn is None:
+            return 0
+        return fn(self, dict(self.mesh))
+
     def explain(self) -> str:
         """Human-readable report: predicted balance, waste, block geometry."""
         sig = self.signature
@@ -303,7 +374,11 @@ class KernelPlan:
             f" waste {self.waste:.1%}"
             f" ({self.padded_elems - self.logical_elems} pad elems)\n"
             f"  predicted traffic {self.predicted_hbm_bytes}B"
-            f" (logical {self.predicted_logical_bytes}B)"
+            f" (logical {self.predicted_logical_bytes}B,"
+            f" comm {self.predicted_comm_bytes}B)"
+            + ("" if not self.local
+               else f"\n  local shard plan for mesh "
+                    f"{dict(self.mesh) or '(none)'}")
             + ("" if self.provenance == "analytic"
                else f"\n  source: {self.provenance}")
         )
@@ -451,6 +526,7 @@ def _plan_uncached(kernel: str, shape: tuple[int, ...], dt: np.dtype,
         naive_balance=naive,
         mesh=mesh_key,
         sublanes=sublanes,
+        local=local,
     )
     # Narrow-dtype waste guarantee: a bf16/fp8 plan must never pay more
     # padding *bytes* than the fp32 plan of the same logical shape.  The

@@ -4,6 +4,13 @@ Layout policy (the paper's SS2.3 parameters, TPU form) comes from the
 planner: columns padded to a 128-lane multiple, interior row count padded to
 a sublane multiple, block rows sized to the VMEM budget; the three shifted
 views give each block its halo without overlap reads.
+
+Under an SPMD mesh the grid *rows* shard over the data axis and each shard
+exchanges one-row halos with its neighbors via ``ppermute`` before
+launching the same Pallas stencil on its locally planned block shape --
+the paper's domain-decomposition move (each thread's working set pinned to
+its own controller, only the boundary rows travel).  Two (1, cols) rows
+per sweep cross the wire instead of every device sweeping the full grid.
 """
 from __future__ import annotations
 
@@ -14,7 +21,7 @@ import jax.numpy as jnp
 
 from repro.api import dispatch
 from repro.api.registry import register_kernel
-from repro.api.spmd import replicated
+from repro.api.spmd import Partitioning
 from repro.core.autotune import StreamSignature
 from repro.kernels._shims import deprecated_wrapper
 from repro.kernels.jacobi import kernel, ref
@@ -39,13 +46,66 @@ def _step(src, *, plan):
     return src.at[1:-1, :].set(out[:rows, :m])
 
 
+def _spmd_jacobi(ctx, src):
+    """shard_map body: halo-exchange Jacobi on a row-block shard.
+
+    ``src`` is this shard's (N_local, M) horizontal stripe of the grid.
+    One-row halos arrive from the neighbors via ``ppermute`` (the edge
+    shards' missing halo is zeros -- harmless, their edge rows are the
+    global boundary and are copied through), the local block shape is
+    re-planned on the stripe (``plan_for(..., local=True)``), and the
+    existing three-shifted-views Pallas stencil sweeps it.
+    """
+    row_axes = ctx.axes(0, 0)
+    n_shards = ctx.size(row_axes)
+    if n_shards <= 1:
+        # Rows whole on this shard (divisibility fallback, or a size-1
+        # data axis): the single-device step on a locally planned block.
+        shape, dtype = _plan_args(src)
+        plan = dispatch.plan_for("jacobi", shape, dtype, local=True)
+        return _step(src, plan=plan)
+    nl, m = src.shape
+    idx = ctx.index(row_axes)
+    if len(row_axes) == 1:
+        axis = row_axes[0]
+        down_perm = [(i, i + 1) for i in range(n_shards - 1)]
+        up_perm = [(i, i - 1) for i in range(1, n_shards)]
+        # halo above my first row = my up-neighbor's last row, and vice
+        # versa; shard 0 / n-1 receive zeros they never read.
+        above = jax.lax.ppermute(src[-1:], axis, down_perm)
+        below = jax.lax.ppermute(src[:1], axis, up_perm)
+    else:  # multi-axis row sharding: gather the boundary rows instead
+        edges = jnp.concatenate([src[:1], src[-1:]], axis=0)
+        gathered = jax.lax.all_gather(edges, row_axes, tiled=False)
+        gathered = gathered.reshape(n_shards, 2, m)
+        above = jnp.where(idx > 0, gathered[idx - 1, 1:2], 0.0)
+        below = jnp.where(idx < n_shards - 1,
+                          gathered[(idx + 1) % n_shards, 0:1], 0.0)
+    plan = dispatch.plan_for("jacobi", (nl, m), src.dtype, local=True)
+    prow, width = plan.padded_shape
+    ext = jnp.concatenate([above, src, below], axis=0)      # (nl + 2, m)
+    padded = jnp.pad(ext, ((0, prow - nl), (0, width - m)))
+    sa = padded[:-2][:prow]
+    sb = padded[2:][:prow]
+    sl = padded[1:-1][:prow]
+    out = kernel.jacobi_rows(sa, sb, sl, n_cols=m,
+                             brows=plan.block_rows)[:nl, :m]
+    # Global boundary rows pass through: shard 0's first row and the last
+    # shard's last row are the grid edge, not interior sites.
+    r = jax.lax.broadcasted_iota(jnp.int32, (nl, 1), 0)
+    edge = ((idx == 0) & (r == 0)) | ((idx == n_shards - 1) & (r == nl - 1))
+    return jnp.where(edge, src, out)
+
+
 @register_kernel("jacobi", signature=StreamSignature(n_read=1, n_write=1),
                  ref=lambda src: ref.jacobi_step(src), plan_args=_plan_args,
                  vmem_buffers=4,
-                 # the 5-point stencil couples neighboring rows: a row
-                 # split would need a halo exchange per sweep, so the
-                 # SPMD path runs the grid replicated on every device
-                 partitioning=replicated(1))
+                 # the 5-point stencil couples neighboring rows, so the
+                 # row-block split carries its halo exchange in the
+                 # spmd_body (one ppermuted row up and down per sweep)
+                 partitioning=Partitioning(in_axes=(("batch", None),),
+                                           out_axes=("batch", None)),
+                 spmd_body=_spmd_jacobi)
 def _launch_jacobi(plan, src):
     """One aligned 5-point sweep on an (N, M) grid (boundaries copied).
     Rows stream once from HBM; the 3 shifted row views are distinct Pallas

@@ -17,9 +17,21 @@ family for fixed representative cells.  ``TOLERANCES`` pins those
 envelopes; a planner or kernel-wrapper change that moves real traffic out
 of its family's envelope fails validation loudly.
 
+A second, SPMD-only check covers *communication*: for the kernel families
+whose partitioning communicates (vocab-parallel xent's lse combine,
+jacobi's halo exchange), ``--comm`` lowers the shard_map launch under a
+real multi-device mesh, runs the collective census on the compiled HLO
+(``launch.lowering.collective_census``, the same ring cost model the
+planner's ``predicted_comm_bytes`` uses), and checks measured wire bytes
+against the *local* plan's prediction.  This needs forced host devices:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        python -m repro.measure.validate --comm --mesh 2x4
+
 Usage:
     python -m repro.measure.validate --all
     python -m repro.measure.validate --family stream --out /tmp/v.json
+    python -m repro.measure.validate --comm --mesh 2x4
 """
 from __future__ import annotations
 
@@ -32,6 +44,7 @@ from typing import Mapping
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro import api
 from repro.launch import lowering
@@ -120,6 +133,127 @@ TOLERANCES: dict[str, Tolerance] = {
 
 
 # ---------------------------------------------------------------------------
+# Communication validation (SPMD launches only)
+# ---------------------------------------------------------------------------
+
+# Representative *global* cells for the communicating families, chosen
+# divisible by every mesh in the CI matrix (data/model up to 8) so the
+# declared partitioning actually engages.
+COMM_CASES: dict[str, tuple[tuple[int, ...], str]] = {
+    "xent": ((64, 4096), "float32"),
+    "jacobi": ((64, 258), "float32"),
+}
+
+# The census applies the exact ring formulas the planner's COMM_MODEL uses,
+# so the ratio sits at ~1.0 when the lowered program emits the predicted
+# collectives and nothing else; the envelope leaves room for an XLA
+# all-reduce combiner fusing payloads or a rewrite adding a small control
+# collective, while a dropped halo (ratio ~0) or a replicated-logits
+# regression (10-100x the lse payload) still lands far outside.
+COMM_TOLERANCES: dict[str, Tolerance] = {
+    "xent": Tolerance(0.5, 2.0),
+    "jacobi": Tolerance(0.5, 2.0),
+}
+
+
+def _mesh_sizes(mesh) -> dict[str, int]:
+    return dict(zip(tuple(mesh.axis_names), tuple(mesh.devices.shape)))
+
+
+def local_shard_shape(kernel: str, shape, dtype, mesh) -> tuple[int, ...]:
+    """The per-shard operand-0 shape the kernel's SPMD body plans on.
+
+    Derived through the same ``spmd.shard_specs`` call the launch path
+    uses -- declared partitioning, ambient rules, divisibility fallback
+    included -- so this can never drift from what the shard body actually
+    plans.  One body quirk is mirrored: jacobi's unsharded fallback plans
+    on its *interior* rows (``plan_args``), while a sharded stripe plans
+    on the stripe itself.
+    """
+    from repro.api import spmd as spmd_lib
+
+    entry = api.get_kernel(kernel)
+    args, scalars = args_for(kernel, shape, dtype)
+    part = spmd_lib.partitioning_for(entry, len(args))
+    _, operand_axes, sizes, _ = spmd_lib.shard_specs(mesh, part.in_axes,
+                                                     args)
+    n_shards = 1
+    local = []
+    for n, axes in zip(args[0].shape, operand_axes[0]):
+        k = 1
+        for a in axes:
+            k *= int(sizes.get(a, 1))
+        n_shards *= k
+        local.append(int(n) // k)
+    if n_shards <= 1:
+        return tuple(int(s) for s in entry.plan_args(*args, **scalars)[0])
+    return tuple(local)
+
+
+def validate_comm_kernel(kernel: str, mesh, *, shape=None, dtype=None) -> dict:
+    """One measured-vs-predicted *wire bytes* record for ``kernel`` launched
+    through the SPMD path over ``mesh``."""
+    if shape is None or dtype is None:
+        shape, dtype = COMM_CASES[kernel]
+    args, scalars = args_for(kernel, shape, dtype)
+    with api.plan_context(mesh=mesh):
+        local = local_shard_shape(kernel, shape, dtype, mesh)
+        plan = api.plan_for(kernel, local, dtype, local=True)
+        jf = jax.jit(lambda *arrays: api.launch(kernel, *arrays, **scalars))
+        t0 = time.time()
+        compiled = jf.lower(*args).compile()
+    census = lowering.collective_census(compiled.as_text())
+    measured = lowering.census_total(census)
+    predicted = plan.predicted_comm_bytes
+    if predicted:
+        ratio = measured / predicted
+    else:
+        ratio = 0.0 if measured == 0 else float("inf")
+    tol = COMM_TOLERANCES[kernel]
+    ok = tol.holds(ratio) if predicted else measured == 0
+    return {
+        "kernel": kernel,
+        "family": kernel.split(".")[0],
+        "check": "comm",
+        "shape": list(shape),
+        "dtype": str(jnp.dtype(dtype).name),
+        "mesh": _mesh_sizes(mesh),
+        "local_shape": list(local),
+        "predicted": {"comm_bytes": predicted},
+        "measured": {
+            "wire_bytes": measured,
+            "collectives": {
+                op: {"count": c["count"], "wire_bytes": c["wire_bytes"]}
+                for op, c in census.items() if c["count"]
+            },
+            "compile_s": round(time.time() - t0, 3),
+        },
+        "ratio": round(ratio, 4) if ratio != float("inf") else "inf",
+        "tolerance": [tol.lo, tol.hi],
+        "status": "ok" if ok else "fail",
+    }
+
+
+def validate_comm(mesh, kernels=None) -> list[dict]:
+    names = list(kernels) if kernels is not None else sorted(COMM_CASES)
+    return [validate_comm_kernel(k, mesh) for k in names]
+
+
+def mesh_from_spec(spec: str):
+    """A ("data", "model") host mesh from a "DxM" string."""
+    d, m = (int(x) for x in spec.lower().split("x"))
+    n = d * m
+    if jax.device_count() < n:
+        raise SystemExit(
+            f"mesh {spec} needs {n} devices, have {jax.device_count()} "
+            f"(set XLA_FLAGS=--xla_force_host_platform_device_count={n})"
+        )
+    return jax.sharding.Mesh(
+        np.asarray(jax.devices()[:n]).reshape(d, m), ("data", "model")
+    )
+
+
+# ---------------------------------------------------------------------------
 # Measurement
 # ---------------------------------------------------------------------------
 
@@ -181,6 +315,7 @@ def validate_kernel(kernel: str, *, shape=None, dtype=None) -> dict:
         "predicted": {
             "hbm_bytes": plan.predicted_hbm_bytes,
             "logical_bytes": plan.predicted_logical_bytes,
+            "comm_bytes": plan.predicted_comm_bytes,
             "waste_bytes": plan.waste_bytes,
             "balance": plan.predicted_balance,
             "naive_balance": plan.naive_balance,
@@ -218,10 +353,15 @@ def write_report(records: list[dict], out: str) -> None:
             doc = json.load(f)
             if doc.get("format") == VALIDATION_FORMAT:
                 existing = doc.get("records", [])
-    merged = {(r["kernel"], tuple(r["shape"]), r["dtype"]): r
-              for r in existing}
+    def key(r):
+        mesh = r.get("mesh")
+        return (r["kernel"], tuple(r["shape"]), r["dtype"],
+                r.get("check", "hbm"),
+                tuple(sorted(mesh.items())) if mesh else ())
+
+    merged = {key(r): r for r in existing}
     for r in records:
-        merged[(r["kernel"], tuple(r["shape"]), r["dtype"])] = r
+        merged[key(r)] = r
     os.makedirs(os.path.dirname(out) or ".", exist_ok=True)
     with open(out, "w") as f:
         json.dump({
@@ -241,8 +381,36 @@ def main(argv=None) -> int:
                     help="validate one family (repeatable)")
     ap.add_argument("--kernel", action="append", default=[],
                     help="validate one kernel (repeatable)")
+    ap.add_argument("--comm", action="store_true",
+                    help="validate predicted_comm_bytes against the "
+                         "collective census of the SPMD launch (needs a "
+                         "multi-device mesh; see --mesh)")
+    ap.add_argument("--mesh", default="2x4",
+                    help="DxM (data x model) host mesh for --comm")
     ap.add_argument("--out", default=OUT_DEFAULT)
     args = ap.parse_args(argv)
+
+    if args.comm:
+        mesh = mesh_from_spec(args.mesh)
+        if args.kernel:
+            unknown = set(args.kernel) - set(COMM_CASES)
+            if unknown:
+                ap.error(f"no comm cell for {sorted(unknown)}; only the "
+                         f"communicating families have one: "
+                         f"{sorted(COMM_CASES)}")
+        records = validate_comm(mesh, kernels=args.kernel or None)
+        for r in records:
+            print(f"[{r['status']:4s}] comm {r['kernel']:8s} "
+                  f"mesh={r['mesh']} "
+                  f"measured={r['measured']['wire_bytes']:.3e} "
+                  f"predicted={r['predicted']['comm_bytes']:.3e} "
+                  f"ratio={r['ratio']} "
+                  f"tol=[{r['tolerance'][0]}, {r['tolerance'][1]}]")
+        write_report(records, args.out)
+        n_fail = sum(r["status"] != "ok" for r in records)
+        print(f"wrote {len(records)} comm records -> {args.out}"
+              + (f" ({n_fail} FAILED)" if n_fail else ""))
+        return 1 if n_fail else 0
 
     names = [k for k in api.list_kernels() if k in CASES]
     if not args.all:

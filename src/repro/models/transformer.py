@@ -241,8 +241,11 @@ def _xent_ref(logits: jax.Array, labels: jax.Array, logical_v: int
 def _xent_fused(logits: jax.Array, labels: jax.Array,
                 logical_v: int) -> jax.Array:
     """Cross-entropy via the registry kernel (tiled online softmax), with
-    the jnp vjp for the backward pass -- Pallas bodies define no autodiff
-    rule, and the gradient (softmax - onehot) is cheap in jnp."""
+    a hand-written vjp for the backward pass -- Pallas bodies define no
+    autodiff rule.  ``kernels.xent.ops.xent_grad`` keeps the backward
+    vocab-parallel under an SPMD mesh (softmax - onehot against the
+    psum-combined lse, same Megatron layout as the forward) and is the
+    plain jnp vjp otherwise."""
     from repro.api import dispatch
 
     return dispatch.launch("xent", logits, labels, logical_v=logical_v)
@@ -256,9 +259,10 @@ def _xent_fused_fwd(logits, labels, logical_v):
 
 
 def _xent_fused_bwd(logical_v, res, g):
+    from repro.kernels.xent import ops as xent_ops
+
     logits, labels = res
-    _, vjp = jax.vjp(lambda l: _xent_ref(l, labels, logical_v), logits)
-    (d_logits,) = vjp(g)
+    d_logits = xent_ops.xent_grad(logits, labels, g, logical_v=logical_v)
     return d_logits, np.zeros(labels.shape, jax.dtypes.float0)
 
 
@@ -282,16 +286,17 @@ def lm_loss(logits: jax.Array, labels: jax.Array, cfg: ModelConfig,
     policy; ``Trainer.plan_hot_kernels`` pins its plan) -- on one device
     directly, and on a multi-device program whenever the ambient context
     carries a real Mesh: ``api.launch`` then shard_maps the kernel with
-    tokens split over the batch mesh axes, each shard running the online
-    softmax over its own tokens at a locally planned block shape and a
-    ``pmean`` combining the equal-sized shard means (``repro.api.spmd``).
-    Within each token shard the vocab axis is whole -- the SPMD fused path
-    trades the Megatron vocab-parallel layout for the fused kernel, which
-    is the right trade below the ~40 GB/device logits regime and refused
-    above it by simply not setting an SPMD mesh.  The masked case (and a
-    meshless multi-device program) keeps the jnp path -- a masked mean
-    cannot be recovered from the kernel's all-token mean (see
-    ``blocks.use_fused_kernels``).
+    tokens split over the batch mesh axes AND the vocab axis split over
+    the model axis (``kernels.xent.ops._spmd_xent``): each shard folds its
+    own vocab slice at a locally planned block shape, the per-shard
+    (max, sumexp, label-logit) partials combine with a cross-shard
+    log-sum-exp (pmax/psum), and a ``pmean`` combines the equal-sized
+    token-shard means.  The backward (``xent_grad``) keeps the same
+    layout, so the fused SPMD path *is* the Megatron vocab-parallel loss
+    -- a non-divisible vocab falls back to whole-vocab shards with a
+    logged reason.  The masked case (and a meshless multi-device program)
+    keeps the jnp path -- a masked mean cannot be recovered from the
+    kernel's all-token mean (see ``blocks.use_fused_kernels``).
     """
     v = logits.shape[-1]
     logical = getattr(cfg, "vocab_logical", 0) or cfg.vocab_size

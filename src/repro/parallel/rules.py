@@ -147,24 +147,58 @@ def spec(*axes: str | None, rules: Mapping[str, AxisTarget] | None = None,
     -- the GSPMD-pragmatic baseline the layout policy then improves on by
     padding (EXPERIMENTS.md SSPerf).
     """
+    p, _ = spec_report(*axes, rules=rules, shape=shape, axis_sizes=axis_sizes)
+    return p
+
+
+def spec_report(*axes: str | None,
+                rules: Mapping[str, AxisTarget] | None = None,
+                shape: tuple[int, ...] | None = None,
+                axis_sizes: Mapping[str, int] | None = None
+                ) -> tuple[P, list[str]]:
+    """``spec`` plus a human-readable reason for every dimension whose
+    declared sharding fell back to replication (divisibility, or a mesh axis
+    already consumed by an earlier dim).  The SPMD kernel-launch path logs
+    these so a vocab of 1111 over ``model=4`` replicating instead of
+    sharding is a recorded decision, not a silent one."""
     rules = rules if rules is not None else (current_rules() or {})
     parts = []
+    fallbacks: list[str] = []
     used: set[str] = set()
     for i, ax in enumerate(axes):
         tgt = rules.get(ax) if ax is not None else None
         if tgt is not None and shape is not None and not _divisible(
             shape[i], tgt, axis_sizes
         ):
+            sizes = axis_sizes if axis_sizes is not None else _axis_sizes.get()
+            names = (tgt,) if isinstance(tgt, str) else tuple(tgt)
+            n = 1
+            for a in names:
+                n *= (sizes or {}).get(a, 1)
+            fallbacks.append(
+                f"dim {i} ({ax!r}, size {shape[i]}) replicated: not "
+                f"divisible by mesh axes {names} (x{n})"
+            )
             tgt = None
         if tgt is not None:
             # a mesh axis may appear at most once per spec: first dim wins
             names = (tgt,) if isinstance(tgt, str) else tuple(tgt)
-            names = tuple(n for n in names if n not in used)
-            used.update(names)
-            tgt = names or None
+            kept = tuple(n for n in names if n not in used)
+            if kept != names:
+                fallbacks.append(
+                    f"dim {i} ({ax!r}) dropped mesh axes "
+                    f"{tuple(n for n in names if n in used)}: already used "
+                    f"by an earlier dim"
+                )
+            used.update(kept)
+            tgt = kept or None
             if tgt is not None and shape is not None and not _divisible(
                 shape[i], tgt, axis_sizes
             ):
+                fallbacks.append(
+                    f"dim {i} ({ax!r}, size {shape[i]}) replicated: not "
+                    f"divisible by remaining mesh axes {tgt}"
+                )
                 tgt = None
         if tgt is None:
             parts.append(None)
@@ -174,7 +208,7 @@ def spec(*axes: str | None, rules: Mapping[str, AxisTarget] | None = None,
             parts.append(tuple(tgt) if len(tgt) > 1 else tgt[0])
     while parts and parts[-1] is None:
         parts.pop()
-    return P(*parts)
+    return P(*parts), fallbacks
 
 
 def shard(x: jax.Array, *axes: str | None) -> jax.Array:

@@ -20,6 +20,18 @@ GOLDEN_PATH = os.path.join(os.path.dirname(__file__), "golden", "plans.json")
 
 # (odd, even) representative logical shapes per registry kernel.  Odd
 # extents exercise every padding rule; even ones must plan tight.
+# Per-shard (local=True) cells for the SPMD launch path, planned under a
+# mapping mesh (no devices needed): these pin the communication model --
+# ``predicted_comm_bytes`` for jacobi's halo rows and xent's lse combine --
+# alongside the local block geometry.  Meshes are (axis, size) pairs.
+SPMD_LOCAL_CELLS: list[tuple[str, tuple[int, ...], str, tuple]] = [
+    ("jacobi", (32, 258), "float32", (("data", 8), ("model", 1))),
+    ("jacobi", (32, 258), "float32", (("data", 2), ("model", 4))),
+    ("xent", (32, 512), "float32", (("data", 2), ("model", 4))),
+    ("xent", (64, 512), "float32", (("data", 1), ("model", 8))),
+    ("rmsnorm", (64, 129), "float32", (("data", 2), ("model", 4))),
+]
+
 SHAPES: dict[str, tuple[tuple[int, ...], tuple[int, ...]]] = {
     "stream.copy": ((8191,), (131072,)),
     "stream.scale": ((8191,), (131072,)),
@@ -45,6 +57,7 @@ def snapshot_plan(plan: KernelPlan) -> dict:
         "waste_bytes": plan.waste_bytes,
         "predicted_hbm_bytes": plan.predicted_hbm_bytes,
         "predicted_logical_bytes": plan.predicted_logical_bytes,
+        "predicted_comm_bytes": plan.predicted_comm_bytes,
         "predicted_balance": round(plan.predicted_balance, 4),
         "naive_balance": round(plan.naive_balance, 4),
     }
@@ -63,6 +76,13 @@ def current_snapshot() -> dict:
             for dtype in DTYPES:
                 key = (f"{kernel}|{'x'.join(str(s) for s in shape)}|{dtype}")
                 out[key] = snapshot_plan(api.plan_for(kernel, shape, dtype))
+    for kernel, shape, dtype, mesh in SPMD_LOCAL_CELLS:
+        tag = ".".join(f"{a}{s}" for a, s in mesh)
+        key = (f"{kernel}|{'x'.join(str(s) for s in shape)}|{dtype}"
+               f"|local@{tag}")
+        with api.plan_context(mesh=dict(mesh)):
+            out[key] = snapshot_plan(
+                api.plan_for(kernel, shape, dtype, local=True))
     return out
 
 
