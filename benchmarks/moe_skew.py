@@ -10,7 +10,6 @@ from repro.core.sharding_skew import layer_skew_gain
 
 def rows() -> list[tuple[str, float, str]]:
     out = []
-    rng = np.random.default_rng(0)
     for name, load in {
         "uniform": np.ones(128),
         "hot1_x16": np.ones(128 * 1) * 1.0,

@@ -12,7 +12,6 @@ import jax.numpy as jnp
 from repro import api
 from repro.core.aliasing import InterleavedMemoryModel, Stream
 from repro.core.autotune import StreamSignature, plan_streams
-from repro.core.layout import LayoutPolicy
 from repro.configs import get_config
 from repro.kernels.triad import ops as triad_ops
 from repro.kernels.triad import ref as triad_ref
@@ -53,7 +52,6 @@ def main() -> None:
     for name, (lo, hi) in changes.items():
         print(f"  {name}: {lo} -> {hi} "
               f"(waste {(hi - lo) / hi:.1%}, shard-aligned for 16-way TP)")
-    pol = LayoutPolicy(tp=16)
     print(f"  vocab shard: {padded.vocab_size // 16} "
           f"(= {padded.vocab_size // 16 // 128} x 128 lanes)")
 

@@ -18,6 +18,16 @@ python scripts/api_smoke.py
 VALIDATION_OUT="${TIER1_VALIDATION_OUT:-$(mktemp "${TMPDIR:-/tmp}/tier1_validation.XXXXXX")}"
 python -m repro.measure.validate --family stream --out "$VALIDATION_OUT"
 echo "tier1: validation report at $VALIDATION_OUT"
-# Stage 3: fast test matrix (full sweeps carry the `sweep` marker and run
+# Stage 3: static analysis -- the layout-hazard/declaration linter over
+# the shipped registry vs the committed baseline (docs/ANALYZE.md), plus
+# ruff when the environment has it (CI always does; the dev container may
+# not, and the analyzer is the part that guards the planner invariants).
+python -m repro.analyze --all
+if command -v ruff >/dev/null 2>&1; then
+  ruff check .
+else
+  echo "tier1: ruff not installed, skipping lint (CI runs it)"
+fi
+# Stage 4: fast test matrix (full sweeps carry the `sweep` marker and run
 # out-of-band: pytest -m sweep).
 exec python -m pytest -q -m "not slow and not sweep" "$@"

@@ -1,0 +1,33 @@
+"""Static analysis of the planner/registry/SPMD stack.
+
+    python -m repro.analyze --all
+
+walks the kernel registry, plans each kernel's representative cells in
+closed form (nothing is executed or lowered), and checks five rule
+families -- aliasing hazards, padding regressions, SPMD declaration
+drift, plan-override hygiene, registry hygiene -- against a committed
+baseline (``src/repro/analyze/baseline.json``).  CI fails only on *new*
+findings; deliberate ones are blessed with ``--update-baseline``.
+See docs/ANALYZE.md for the rule catalog.
+"""
+from repro.analyze.engine import (
+    AnalysisContext,
+    Finding,
+    GATING,
+    RULES,
+    SEVERITIES,
+    run,
+)
+from repro.analyze.report import (
+    DEFAULT_BASELINE,
+    load_baseline,
+    render_text,
+    save_baseline,
+    split_new,
+)
+
+__all__ = [
+    "AnalysisContext", "Finding", "RULES", "SEVERITIES", "GATING", "run",
+    "DEFAULT_BASELINE", "load_baseline", "save_baseline", "split_new",
+    "render_text",
+]

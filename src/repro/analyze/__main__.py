@@ -1,0 +1,90 @@
+"""CLI: ``python -m repro.analyze --all``.
+
+Exit codes: 0 = no new gating findings, 1 = new findings (or --fixture
+proving the gate fires), 2 = usage error.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from repro.analyze import engine, report
+
+
+def build_parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.analyze",
+        description=(
+            "Static layout-hazard and declaration-consistency analysis of "
+            "the kernel registry (see docs/ANALYZE.md)."
+        ),
+    )
+    p.add_argument("--all", action="store_true",
+                   help="analyze every registered kernel")
+    p.add_argument("--kernel", action="append", default=[],
+                   help="restrict to one kernel (repeatable)")
+    p.add_argument("--profile", action="append", default=[],
+                   help="also audit a plan-override profile (repeatable)")
+    p.add_argument("--rule", action="append", default=[],
+                   help="run only this rule id (repeatable)")
+    p.add_argument("--baseline", default=report.DEFAULT_BASELINE,
+                   help="baseline file (default: the committed one)")
+    p.add_argument("--no-baseline", action="store_true",
+                   help="gate on every finding, ignoring the baseline")
+    p.add_argument("--update-baseline", action="store_true",
+                   help="bless the current gating findings into --baseline")
+    p.add_argument("--fixture", action="store_true",
+                   help="register the seeded-hazard fixtures first "
+                        "(CI self-test: the run must then fail)")
+    p.add_argument("--format", choices=("text", "json"), default="text")
+    p.add_argument("--out", default=None,
+                   help="also write the JSON report to this path")
+    return p
+
+
+def main(argv=None) -> int:
+    args = build_parser().parse_args(argv)
+    if not args.all and not args.kernel and not args.profile:
+        build_parser().print_usage(sys.stderr)
+        print("error: nothing to analyze (pass --all, --kernel, or "
+              "--profile)", file=sys.stderr)
+        return 2
+
+    if args.fixture:
+        from repro.analyze import fixtures  # noqa: F401 -- registers hazards
+
+    from repro.api import registry
+
+    entries = registry.entries()
+    if args.kernel:
+        known = {e.name for e in entries}
+        missing = [k for k in args.kernel if k not in known]
+        if missing:
+            print(f"error: unknown kernel(s) {missing}; known: "
+                  f"{sorted(known)}", file=sys.stderr)
+            return 2
+        entries = [e for e in entries if e.name in args.kernel]
+
+    ctx = engine.AnalysisContext(entries, profile_paths=args.profile)
+    findings = engine.run(ctx, only=args.rule or None)
+
+    if args.update_baseline:
+        n = report.save_baseline(args.baseline, findings)
+        print(f"blessed {n} finding(s) into {args.baseline}")
+        return 0
+
+    baseline = set() if args.no_baseline else report.load_baseline(args.baseline)
+    if args.format == "json":
+        print(report.render_json(findings, baseline))
+    else:
+        print(report.render_text(findings, baseline))
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(report.render_json(findings, baseline))
+            f.write("\n")
+    new, _ = report.split_new(findings, baseline)
+    return 1 if new else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,210 @@
+"""Analysis engine: findings, the rule registry, and the registry walk.
+
+The engine is deliberately dumb: it plans every kernel's representative
+cells once (closed-form arithmetic -- nothing is traced, lowered, or
+executed), hands the resulting ``AnalysisContext`` to each registered rule,
+and collects ``Finding``s.  All layout judgment lives in ``rules``; all
+baseline/report plumbing lives in ``report``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Callable, Iterable
+
+from repro.core.aliasing import InterleavedMemoryModel
+from repro.core.planner import KernelPlan, plan_kernel
+
+SEVERITIES = ("error", "warning", "info")
+
+# Severities that gate CI: a *new* (non-baselined) finding at one of these
+# levels makes the CLI exit non-zero.  ``info`` findings are advisory and
+# never gate or enter the baseline.
+GATING = ("error", "warning")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One hazard the static analysis surfaced.
+
+    ``fingerprint`` identifies the finding across runs for the baseline
+    diff: rule + subject + cell, but *not* the message, so rewording a
+    rule's output never un-blesses a baselined hazard.
+    """
+
+    rule: str       # "ALIAS001", ...
+    severity: str   # "error" | "warning" | "info"
+    subject: str    # kernel name, or "profile:<path>"
+    cell: str       # "(300, 1111) float32" (empty for kernel-level findings)
+    message: str
+    hint: str = ""
+
+    def __post_init__(self):
+        if self.severity not in SEVERITIES:
+            raise ValueError(
+                f"severity must be one of {SEVERITIES}, got {self.severity!r}"
+            )
+
+    @property
+    def fingerprint(self) -> str:
+        return f"{self.rule}|{self.subject}|{self.cell}"
+
+    @property
+    def gating(self) -> bool:
+        return self.severity in GATING
+
+    def to_dict(self) -> dict:
+        return {
+            "rule": self.rule,
+            "severity": self.severity,
+            "subject": self.subject,
+            "cell": self.cell,
+            "message": self.message,
+            "hint": self.hint,
+            "fingerprint": self.fingerprint,
+        }
+
+
+@dataclasses.dataclass(frozen=True)
+class Rule:
+    """One registered rule: id, family, and the check itself."""
+
+    id: str
+    family: str     # "aliasing" | "padding" | "drift" | "cache" | "registry"
+    doc: str
+    fn: Callable    # (AnalysisContext) -> Iterable[Finding]
+
+
+RULES: dict[str, Rule] = {}
+
+
+def rule(rule_id: str, family: str, doc: str = ""):
+    """Decorator: register a rule under ``rule_id``.
+
+    Rules are pure functions of the :class:`AnalysisContext`; they yield
+    :class:`Finding`s and must not execute or lower anything.
+    """
+
+    def deco(fn: Callable) -> Callable:
+        if rule_id in RULES and RULES[rule_id].fn is not fn:
+            raise ValueError(f"rule {rule_id!r} already registered")
+        RULES[rule_id] = Rule(id=rule_id, family=family,
+                              doc=doc or (fn.__doc__ or "").strip(), fn=fn)
+        return fn
+
+    return deco
+
+
+def _default_golden_path() -> str | None:
+    p = os.path.join("tests", "golden", "plans.json")
+    return p if os.path.exists(p) else None
+
+
+class AnalysisContext:
+    """Everything the rules look at: entries, planned cells, profiles.
+
+    ``entries`` defaults to the full registry (fixtures excluded unless
+    their module was imported and registered them).  Cells come from each
+    entry's ``analysis_cells`` declaration, falling back to the validation
+    suite's representative cells -- the same cells the measured-vs-predicted
+    envelope pins, so the analyzer and the validator judge the same plans.
+    """
+
+    def __init__(self, entries=None, *, model: InterleavedMemoryModel | None = None,
+                 profile_paths: Iterable[str] = (),
+                 golden_path: str | None = None):
+        if entries is None:
+            from repro.api import registry
+
+            entries = registry.entries()
+        self.entries = list(entries)
+        self.model = model or InterleavedMemoryModel()
+        self.profile_paths = tuple(profile_paths)
+        self.golden_path = (golden_path if golden_path is not None
+                            else _default_golden_path())
+        self._planned: list[tuple] | None = None
+        self._golden_kernels: frozenset[str] | None = None
+
+    # ---- cells -----------------------------------------------------------
+    def cells_for(self, entry) -> list[tuple[tuple[int, ...], str, dict | None]]:
+        """Representative ``(shape, dtype, knobs)`` cells for one entry."""
+        declared = getattr(entry, "analysis_cells", ()) or ()
+        if declared:
+            out = []
+            for cell in declared:
+                shape, dtype = cell[0], cell[1]
+                knobs = dict(cell[2]) if len(cell) > 2 and cell[2] else None
+                out.append((tuple(int(s) for s in shape), str(dtype), knobs))
+            return out
+        from repro.measure.validate import CASES
+
+        case = CASES.get(entry.name)
+        if case is None:
+            return []
+        shape, dtype = case
+        return [(tuple(int(s) for s in shape), str(dtype), None)]
+
+    def plan(self, kernel: str, shape, dtype,
+             knobs: dict | None = None) -> KernelPlan:
+        knobs = knobs or {}
+        return plan_kernel(kernel, shape, dtype,
+                           sublanes=knobs.get("sublanes"),
+                           vmem_budget=knobs.get("vmem_budget"))
+
+    def planned_cells(self):
+        """``(entry, shape, dtype, knobs, plan | None, error | None)`` for
+        every analysis cell, planned once and shared by all rules."""
+        if self._planned is None:
+            out = []
+            for entry in self.entries:
+                for shape, dtype, knobs in self.cells_for(entry):
+                    try:
+                        plan = self.plan(entry.name, shape, dtype, knobs)
+                        err = None
+                    except Exception as e:  # noqa: BLE001 -- becomes a finding
+                        plan, err = None, f"{type(e).__name__}: {e}"
+                    out.append((entry, shape, dtype, knobs, plan, err))
+            self._planned = out
+        return self._planned
+
+    # ---- coverage --------------------------------------------------------
+    def golden_kernels(self) -> frozenset[str] | None:
+        """Kernel names with golden-snapshot coverage, or ``None`` when the
+        golden file is unavailable (rule REG003 then stays silent)."""
+        if self.golden_path is None:
+            return None
+        if self._golden_kernels is None:
+            import json
+
+            try:
+                with open(self.golden_path) as f:
+                    golden = json.load(f)
+            except (OSError, ValueError):
+                return None
+            self._golden_kernels = frozenset(
+                key.split("|", 1)[0] for key in golden
+            )
+        return self._golden_kernels
+
+
+def cell_label(shape, dtype, knobs: dict | None = None) -> str:
+    """Stable cell string for findings/fingerprints."""
+    label = f"{tuple(shape)} {dtype}"
+    if knobs:
+        label += " " + ",".join(f"{k}={v}" for k, v in sorted(knobs.items()))
+    return label
+
+
+def run(ctx: AnalysisContext, only: Iterable[str] | None = None) -> list[Finding]:
+    """Run every registered rule (or the ``only`` subset) over ``ctx``."""
+    import repro.analyze.rules  # noqa: F401 -- registers the rules
+
+    wanted = set(only) if only is not None else None
+    findings: list[Finding] = []
+    for rule_id in sorted(RULES):
+        if wanted is not None and rule_id not in wanted:
+            continue
+        findings.extend(RULES[rule_id].fn(ctx))
+    order = {s: i for i, s in enumerate(SEVERITIES)}
+    findings.sort(key=lambda f: (order[f.severity], f.rule, f.subject, f.cell))
+    return findings

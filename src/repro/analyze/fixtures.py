@@ -1,0 +1,75 @@
+"""Seeded-hazard fixtures: deliberately bad registrations for the analyzer.
+
+Importing this module registers two analysis-only kernels under the
+``hazard.`` prefix.  They have no executable body -- they exist so every
+rule family has a known-positive target: CI runs the analyzer once with
+the fixtures registered and asserts it exits non-zero, proving the gate
+can actually fail.  ``tests/test_golden_plans.py`` excludes the prefix
+from the shipped-kernel snapshot; nothing else ever resolves these names.
+"""
+from __future__ import annotations
+
+from repro.api.registry import register_kernel
+from repro.api.spmd import Partitioning
+from repro.core.autotune import StreamSignature
+
+FIXTURE_PREFIX = "hazard"
+
+FIXTURE_KERNELS = ("hazard.pow2", "hazard.drift")
+
+
+def _plan_args(a, **scalars):
+    return tuple(a.shape), str(a.dtype)
+
+
+def _no_body(plan, *arrays, **scalars):
+    raise NotImplementedError("hazard fixtures are analysis-only")
+
+
+# Aliasing + padding hazards, all from the declared analysis cells:
+#   (8, 8192)  fp32 -> 32 KiB power-of-two row stride        (ALIAS001)
+#   (16,)      fp32 -> one tile of data, 98% padding         (PAD001)
+#   (8, 1111)  bf16 with a forced 32-sublane tile (an explicit
+#              override, so the planner's narrow-dtype guarantee
+#              does not rewrite it) -> pays more padding bytes
+#              than the fp32 plan                            (PAD002)
+# plus ref=None (REG002), no partitioning (REG001), and no golden
+# coverage (REG003).
+register_kernel(
+    "hazard.pow2",
+    signature=StreamSignature(n_read=2, n_write=1),
+    ref=None,
+    plan_args=_plan_args,
+    analysis_cells=(
+        ((8, 8192), "float32"),
+        ((16,), "float32"),
+        ((8, 1111), "bfloat16", {"sublanes": 32}),
+    ),
+    doc="seeded aliasing/padding hazard (analysis fixture)",
+)(_no_body)
+
+
+def _spmd_drift(ctx, x):
+    # Consults operand 0 dim 0 (declared) and a phantom operand 1 (never
+    # declared), while ignoring the declared vocab split of dim 1.
+    rows = ctx.axes(0, 0)
+    phantom = ctx.axes(1, 0)
+    return x if (rows or phantom) else x
+
+
+register_kernel(
+    "hazard.drift",
+    signature=StreamSignature(n_read=1, n_write=1),
+    ref=lambda x: x,
+    plan_args=_plan_args,
+    partitioning=Partitioning(in_axes=(("batch", "vocab"),)),
+    spmd_body=_spmd_drift,
+    analysis_cells=(((64, 256), "float32"),),
+    doc="seeded declaration-drift hazard (analysis fixture)",
+)(_no_body)
+
+
+def register_fixtures() -> tuple[str, ...]:
+    """Idempotent: importing this module registered the fixtures; calling
+    this just names them for callers that want the list."""
+    return FIXTURE_KERNELS

@@ -1,0 +1,108 @@
+"""Baseline bookkeeping and report rendering for ``repro.analyze``.
+
+The baseline mirrors the golden-plan workflow: known findings live in a
+committed JSON file keyed by fingerprint, CI gates only on findings *not*
+in it, and deliberate changes are blessed with ``--update-baseline``
+(the exact ``--update-golden`` bless shape).  Only gating severities
+(error/warning) enter the baseline -- info findings are advisory.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from repro.analyze.engine import Finding
+
+BASELINE_FORMAT = "repro.analyze_baseline"
+BASELINE_VERSION = 1
+
+DEFAULT_BASELINE = os.path.join(os.path.dirname(__file__), "baseline.json")
+
+
+def load_baseline(path: str) -> set[str]:
+    """Fingerprints blessed at ``path`` (empty set when the file is absent:
+    a repo without a baseline gates on every finding)."""
+    if not os.path.exists(path):
+        return set()
+    with open(path) as f:
+        doc = json.load(f)
+    if doc.get("format") != BASELINE_FORMAT:
+        raise ValueError(
+            f"{path}: not an analyze baseline (format={doc.get('format')!r})"
+        )
+    if int(doc.get("version", 0)) > BASELINE_VERSION:
+        raise ValueError(
+            f"{path}: baseline version {doc.get('version')} is newer than "
+            f"supported {BASELINE_VERSION}"
+        )
+    return set(doc.get("fingerprints", ()))
+
+
+def save_baseline(path: str, findings: list[Finding]) -> int:
+    """Bless the gating findings into ``path``; returns the count."""
+    fps = sorted({f.fingerprint for f in findings if f.gating})
+    doc = {
+        "format": BASELINE_FORMAT,
+        "version": BASELINE_VERSION,
+        "fingerprints": fps,
+    }
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1)
+        f.write("\n")
+    return len(fps)
+
+
+def split_new(findings: list[Finding],
+              baseline: set[str]) -> tuple[list[Finding], list[Finding]]:
+    """``(new_gating, known_or_info)`` under ``baseline``."""
+    new = [f for f in findings
+           if f.gating and f.fingerprint not in baseline]
+    rest = [f for f in findings
+            if not f.gating or f.fingerprint in baseline]
+    return new, rest
+
+
+def render_text(findings: list[Finding], baseline: set[str]) -> str:
+    """Human-readable report: new findings first, then baselined/info."""
+    new, rest = split_new(findings, baseline)
+    lines: list[str] = []
+
+    def block(f: Finding, tag: str) -> None:
+        where = f.subject + (f" [{f.cell}]" if f.cell else "")
+        lines.append(f"{f.severity.upper():>7} {f.rule} {where}{tag}")
+        lines.append(f"        {f.message}")
+        if f.hint:
+            lines.append(f"        fix: {f.hint}")
+
+    if new:
+        lines.append(f"-- {len(new)} new finding(s) (not in baseline) --")
+        for f in new:
+            block(f, "")
+    for f in rest:
+        tag = " (baselined)" if f.gating else ""
+        block(f, tag)
+    n_err = sum(1 for f in findings if f.severity == "error")
+    n_warn = sum(1 for f in findings if f.severity == "warning")
+    n_info = sum(1 for f in findings if f.severity == "info")
+    lines.append(
+        f"{len(findings)} finding(s): {n_err} error, {n_warn} warning, "
+        f"{n_info} info; {len(new)} new vs baseline "
+        f"({len(baseline)} blessed)"
+    )
+    return "\n".join(lines)
+
+
+def render_json(findings: list[Finding], baseline: set[str]) -> str:
+    new, _ = split_new(findings, baseline)
+    new_fps = {f.fingerprint for f in new}
+    doc = {
+        "format": "repro.analyze_report",
+        "version": 1,
+        "findings": [
+            {**f.to_dict(), "new": f.fingerprint in new_fps}
+            for f in findings
+        ],
+        "new_count": len(new),
+    }
+    return json.dumps(doc, indent=1)

@@ -1,0 +1,454 @@
+"""The rule catalog (see docs/ANALYZE.md for the prose version).
+
+Five families, all computed from planner/registry declarations alone:
+
+* ALIAS -- aliasing hazards from padded strides vs. the interleave period
+  (the paper's thrashing condition, paper SS2.2/Fig. 2).
+* PAD   -- padding regressions against per-family waste budgets and the
+  narrow-dtype guarantee (PR-3 invariant).
+* DRIFT -- SPMD declaration vs. what the ``spmd_body`` actually consults,
+  and collectives with no ``COMM_MODEL`` price.
+* CACHE -- plan-override profile hygiene (orphan / stale cells).
+* REG   -- registry hygiene (ref, partitioning, golden coverage, cells).
+"""
+from __future__ import annotations
+
+from typing import Iterable
+
+from repro.analyze.engine import AnalysisContext, Finding, cell_label, rule
+from repro.core.planner import COMM_MODEL, KernelPlan, stream_stride_facts
+
+# A leading-dim stride this large that is also a power of two walks one
+# controller per row *and* one cache/bank set -- the classic 2^k critical
+# stride.  Smaller powers of two (one or two interleave periods) are the
+# unavoidable cost of lane alignment and are not worth flagging.
+POW2_STRIDE_MIN_BYTES = 4096
+
+# Per-family padding budget: fraction of the physical footprint the plan
+# may spend on padding at its representative cells.  Streams reshaped from
+# awkward 1-D lengths legitimately pay up to ~25%; 2-D kernels plan much
+# tighter.  Keyed by family prefix ("stream", "lbm", ...).
+WASTE_BUDGET_FRAC = {"lbm": 0.10, "rmsnorm": 0.15, "xent": 0.15}
+WASTE_BUDGET_DEFAULT = 0.30
+
+
+def _family(kernel: str) -> str:
+    return kernel.split(".")[0]
+
+
+# ---------------------------------------------------------------------------
+# ALIAS -- aliasing hazards
+# ---------------------------------------------------------------------------
+
+@rule("ALIAS001", "aliasing")
+def alias_pow2_stride(ctx: AnalysisContext) -> Iterable[Finding]:
+    """Planned leading-dim stride is a large power of two: every row of a
+    stream lands on the same controller, so channel coverage rests entirely
+    on the planned skews staying applied at launch."""
+    for entry, shape, dtype, knobs, plan, _ in ctx.planned_cells():
+        if plan is None:
+            continue
+        facts = stream_stride_facts(plan, ctx.model)
+        stride = facts["leading_stride_bytes"]
+        if facts["stride_pow2"] and stride >= POW2_STRIDE_MIN_BYTES:
+            yield Finding(
+                rule="ALIAS001", severity="warning", subject=entry.name,
+                cell=cell_label(shape, dtype, knobs),
+                message=(
+                    f"leading-dim stride {stride} B is a power of two >= "
+                    f"{POW2_STRIDE_MIN_BYTES} B ({stride // facts['period_bytes']}"
+                    f"x the {facts['period_bytes']} B interleave period): a "
+                    f"row walk revisits one controller per stream; balance "
+                    f"relies on the planned skews "
+                    f"(predicted {facts['predicted_balance']:.2f} vs naive "
+                    f"{facts['naive_balance']:.2f})"
+                ),
+                hint=(
+                    "keep the LayoutPlan skews on the launch path, or pad "
+                    "the minor dim by one extra lane tile to break the "
+                    "power-of-two stride"
+                ),
+            )
+
+
+@rule("ALIAS002", "aliasing")
+def alias_stream_collision(ctx: AnalysisContext) -> Iterable[Finding]:
+    """A kernel's hot streams share a critical modulus *and* their planned
+    base offsets collide on the same controller -- the paper's thrashing
+    condition (all streams hammer one memory controller every tick)."""
+    for entry, shape, dtype, knobs, plan, _ in ctx.planned_cells():
+        if plan is None:
+            continue
+        yield from check_stream_collision(
+            plan, ctx.model, cell=cell_label(shape, dtype, knobs))
+
+
+def check_stream_collision(plan: KernelPlan, model,
+                           cell: str = "") -> Iterable[Finding]:
+    """ALIAS002 on one plan (exposed for tests and ad-hoc plan audits)."""
+    facts = stream_stride_facts(plan, model)
+    n = facts["n_streams"]
+    if n <= 1:
+        return
+    coverable = min(n, model.n_channels)
+    distinct = facts["distinct_start_channels"]
+    if (facts["stride_gcd_period"] == facts["period_bytes"]
+            and distinct < coverable):
+        yield Finding(
+            rule="ALIAS002", severity="error", subject=plan.kernel,
+            cell=cell or cell_label(plan.logical_shape, plan.dtype),
+            message=(
+                f"{n} streams with period-aliased stride "
+                f"(gcd(stride, period) = {facts['period_bytes']} B) start on "
+                f"only {distinct} of {coverable} coverable controllers "
+                f"(offsets {facts['offsets_bytes']} B): concurrent streams "
+                f"thrash the same controller "
+                f"(predicted balance {facts['predicted_balance']:.2f})"
+            ),
+            hint=(
+                "skew stream bases by one channel step each "
+                "(core.autotune.plan_streams) instead of page-aligning "
+                "them all"
+            ),
+        )
+
+
+# ---------------------------------------------------------------------------
+# PAD -- padding regressions
+# ---------------------------------------------------------------------------
+
+@rule("PAD001", "padding")
+def pad_over_budget(ctx: AnalysisContext) -> Iterable[Finding]:
+    """A cell's padding exceeds its family's waste budget."""
+    for entry, shape, dtype, knobs, plan, _ in ctx.planned_cells():
+        if plan is None:
+            continue
+        budget = WASTE_BUDGET_FRAC.get(_family(entry.name),
+                                       WASTE_BUDGET_DEFAULT)
+        if plan.waste > budget:
+            yield Finding(
+                rule="PAD001", severity="warning", subject=entry.name,
+                cell=cell_label(shape, dtype, knobs),
+                message=(
+                    f"padding is {plan.waste:.1%} of the physical footprint "
+                    f"({plan.waste_bytes} B), over the "
+                    f"{_family(entry.name)!r} family budget of {budget:.0%} "
+                    f"(logical {plan.logical_shape} -> "
+                    f"physical {plan.padded_shape})"
+                ),
+                hint=(
+                    "pick a representative shape nearer a tile multiple, or "
+                    "raise the family budget in analyze.rules with a "
+                    "comment justifying the waste"
+                ),
+            )
+
+
+@rule("PAD002", "padding")
+def pad_narrow_dtype_regression(ctx: AnalysisContext) -> Iterable[Finding]:
+    """A narrow dtype pays more padding bytes than fp32 would -- the PR-3
+    invariant the planner enforces for native sublane tiles, re-checked
+    here so explicit sublane overrides cannot smuggle the regression in."""
+    import numpy as np
+
+    for entry, shape, dtype, knobs, plan, _ in ctx.planned_cells():
+        if plan is None:
+            continue
+        itemsize = np.dtype(dtype).itemsize
+        if itemsize >= 4:
+            # fp32 cell: probe the native bf16 plan of the same logical
+            # shape so every kernel gets narrow-dtype coverage even when
+            # its declared cells are all fp32.
+            try:
+                narrow = ctx.plan(entry.name, shape, "bfloat16")
+                wide = plan
+            except Exception:  # noqa: BLE001 -- REG004 reports plan failures
+                continue
+            probe_label = cell_label(shape, "bfloat16")
+        else:
+            narrow = plan
+            try:
+                wide_knobs = ({"vmem_budget": knobs["vmem_budget"]}
+                              if knobs and "vmem_budget" in knobs else None)
+                wide = ctx.plan(entry.name, shape, "float32", wide_knobs)
+            except Exception:  # noqa: BLE001
+                continue
+            probe_label = cell_label(shape, dtype, knobs)
+        n_item = np.dtype(narrow.dtype).itemsize
+        if narrow.waste_bytes * 4 > wide.waste_bytes * n_item:
+            yield Finding(
+                rule="PAD002", severity="error", subject=entry.name,
+                cell=probe_label,
+                message=(
+                    f"{narrow.dtype} plan pays {narrow.waste_bytes} B of "
+                    f"padding where fp32 pays {wide.waste_bytes} B -- more "
+                    f"than the {n_item}/4 byte ratio the narrow-dtype "
+                    f"guarantee allows (sublanes {narrow.sublanes} vs "
+                    f"{wide.sublanes})"
+                ),
+                hint=(
+                    "drop the explicit sublane override (the planner falls "
+                    "back to fp32 geometry when the native tile pads "
+                    "worse), or shrink the row tile"
+                ),
+            )
+
+
+# ---------------------------------------------------------------------------
+# DRIFT -- declaration drift
+# ---------------------------------------------------------------------------
+
+def _declared_sharded_dims(part) -> set[tuple[int, int]]:
+    """(operand, dim) pairs the Partitioning declares sharded.  Dims after
+    an Ellipsis have no static index, so only the head of such templates
+    is considered."""
+    out: set[tuple[int, int]] = set()
+    for i, template in enumerate(part.in_axes):
+        for d, ax in enumerate(template):
+            if ax is Ellipsis:
+                break
+            if isinstance(ax, str):
+                out.add((i, d))
+    return out
+
+
+@rule("DRIFT001", "drift")
+def drift_consulted_axes(ctx: AnalysisContext) -> Iterable[Finding]:
+    """``Partitioning`` axes vs. the axes the ``spmd_body`` consults via
+    ``ShardContext.axes``: a declared-sharded dim the body never consults
+    means the body cannot be handling that split; a consulted dim never
+    declared sharded is dead placement logic."""
+    from repro.api.spmd import consulted_operand_dims
+
+    for entry in ctx.entries:
+        if entry.spmd_body is None or entry.partitioning is None:
+            continue
+        consulted = consulted_operand_dims(entry.spmd_body)
+        if consulted is None:
+            yield Finding(
+                rule="DRIFT001", severity="info", subject=entry.name,
+                message=(
+                    "spmd_body's ShardContext.axes usage is not statically "
+                    "introspectable (no source or non-literal arguments); "
+                    "declaration drift cannot be checked"
+                ),
+                cell="",
+                hint="call ctx.axes with literal (operand, dim) arguments",
+            )
+            continue
+        declared = _declared_sharded_dims(entry.partitioning)
+        for op, dim in sorted(declared - consulted):
+            ax = entry.partitioning.in_axes[op][dim]
+            yield Finding(
+                rule="DRIFT001", severity="warning", subject=entry.name,
+                cell=f"operand {op} dim {dim}",
+                message=(
+                    f"partitioning declares operand {op} dim {dim} sharded "
+                    f"over {ax!r} but the spmd_body never consults "
+                    f"ctx.axes({op}, {dim}) -- the body cannot be combining "
+                    f"across that split"
+                ),
+                hint=(
+                    "consult the axes in the body (and handle the split), "
+                    "or declare the dim None/replicated"
+                ),
+            )
+        for op, dim in sorted(consulted - declared):
+            in_range = op < len(entry.partitioning.in_axes)
+            yield Finding(
+                rule="DRIFT001", severity="error", subject=entry.name,
+                cell=f"operand {op} dim {dim}",
+                message=(
+                    f"spmd_body consults ctx.axes({op}, {dim}) but the "
+                    f"partitioning "
+                    + (f"declares that dim replicated"
+                       if in_range else
+                       f"has no operand {op} at all")
+                    + " -- the consulted axes are always empty"
+                ),
+                hint=(
+                    "declare the logical axis in Partitioning.in_axes, or "
+                    "delete the dead consultation"
+                ),
+            )
+
+
+@rule("DRIFT002", "drift")
+def drift_unpriced_collectives(ctx: AnalysisContext) -> Iterable[Finding]:
+    """A kernel-owned ``spmd_body`` communicates by construction, so a
+    kernel with one but no ``COMM_MODEL`` price means
+    ``predicted_comm_bytes`` silently reports zero and ``validate --comm``
+    has nothing to check."""
+    for entry in ctx.entries:
+        if entry.spmd_body is not None and entry.name not in COMM_MODEL:
+            yield Finding(
+                rule="DRIFT002", severity="warning", subject=entry.name,
+                cell="",
+                message=(
+                    "kernel owns an spmd_body (cross-shard communication) "
+                    "but has no COMM_MODEL entry: predicted_comm_bytes is 0 "
+                    "and the collective census has no prediction to check"
+                ),
+                hint=(
+                    "add a ring-cost formula to core.planner.COMM_MODEL "
+                    "(see _comm_jacobi/_comm_xent)"
+                ),
+            )
+    # The reverse direction checks the *full* registry, not the analysis
+    # subset: pricing jacobi is not "dead" just because this run only
+    # looked at xent.
+    from repro.api import registry
+
+    all_registered = set(registry.list_kernels())
+    for kernel in sorted(COMM_MODEL):
+        if kernel not in all_registered:
+            yield Finding(
+                rule="DRIFT002", severity="warning", subject=kernel,
+                cell="",
+                message=(
+                    f"COMM_MODEL prices kernel {kernel!r} but no such "
+                    f"kernel is registered -- the price is dead and drifts "
+                    f"unchecked"
+                ),
+                hint="remove the stale COMM_MODEL entry",
+            )
+
+
+# ---------------------------------------------------------------------------
+# CACHE -- plan-cache / override hygiene
+# ---------------------------------------------------------------------------
+
+@rule("CACHE001", "cache")
+def cache_orphan_overrides(ctx: AnalysisContext) -> Iterable[Finding]:
+    """Profile override cells that no registered kernel can ever consume."""
+    from repro.measure.profile import audit_profile
+
+    for path in ctx.profile_paths:
+        for issue in audit_profile(path):
+            if issue["kind"] != "orphan":
+                continue
+            yield Finding(
+                rule="CACHE001", severity="warning",
+                subject=f"profile:{path}", cell=issue["cell"],
+                message=issue["detail"],
+                hint=(
+                    "delete the cell from the profile, or restore the "
+                    "kernel registration it was swept for"
+                ),
+            )
+
+
+@rule("CACHE002", "cache")
+def cache_stale_overrides(ctx: AnalysisContext) -> Iterable[Finding]:
+    """Profile cells whose recorded geometry the planner no longer
+    reproduces under the recorded knobs -- a strict ``load_profile`` of the
+    file will fail at use time; surface it at lint time instead."""
+    from repro.measure.profile import audit_profile
+
+    for path in ctx.profile_paths:
+        for issue in audit_profile(path):
+            if issue["kind"] not in ("stale", "invalid"):
+                continue
+            yield Finding(
+                rule="CACHE002", severity="error",
+                subject=f"profile:{path}", cell=issue["cell"],
+                message=f"{issue['kind']} override: {issue['detail']}",
+                hint=(
+                    "re-run the sweep to regenerate the profile "
+                    "(python -m repro.measure.sweep), or delete the cell"
+                ),
+            )
+
+
+# ---------------------------------------------------------------------------
+# REG -- registry hygiene
+# ---------------------------------------------------------------------------
+
+@rule("REG001", "registry")
+def reg_missing_partitioning(ctx: AnalysisContext) -> Iterable[Finding]:
+    """Kernels registered without any SPMD placement rule run fully
+    replicated under a mesh -- legal, but worth knowing."""
+    for entry in ctx.entries:
+        if entry.partitioning is None:
+            yield Finding(
+                rule="REG001", severity="info", subject=entry.name, cell="",
+                message=(
+                    "no Partitioning declared: every device computes the "
+                    "full array under an SPMD mesh"
+                ),
+                hint=(
+                    "declare partitioning=replicated(n) to make the choice "
+                    "explicit, or a real axis template to shard"
+                ),
+            )
+
+
+@rule("REG002", "registry")
+def reg_missing_ref(ctx: AnalysisContext) -> Iterable[Finding]:
+    """Kernels without a reference oracle cannot be parity-tested."""
+    for entry in ctx.entries:
+        if not callable(entry.ref):
+            yield Finding(
+                rule="REG002", severity="error", subject=entry.name, cell="",
+                message=(
+                    "registered without a callable ref oracle: parity tests "
+                    "and the jnp fallback path are impossible"
+                ),
+                hint="register a pure-jnp reference with the same signature",
+            )
+
+
+@rule("REG003", "registry")
+def reg_missing_golden(ctx: AnalysisContext) -> Iterable[Finding]:
+    """Kernels with no golden-snapshot coverage: planner drift on their
+    cells goes unnoticed until a measured run."""
+    covered = ctx.golden_kernels()
+    if covered is None:
+        return
+    for entry in ctx.entries:
+        if entry.name not in covered:
+            yield Finding(
+                rule="REG003", severity="warning", subject=entry.name,
+                cell="",
+                message=(
+                    "no cell in tests/golden/plans.json snapshots this "
+                    "kernel's plans"
+                ),
+                hint=(
+                    "add shapes to tests/test_golden_plans.py SHAPES and "
+                    "bless with --update-golden"
+                ),
+            )
+
+
+@rule("REG004", "registry")
+def reg_analysis_cells(ctx: AnalysisContext) -> Iterable[Finding]:
+    """Analysis-cell coverage: every kernel needs at least one plannable
+    representative cell for the other rules to judge."""
+    seen: set[str] = set()
+    for entry, shape, dtype, knobs, plan, err in ctx.planned_cells():
+        seen.add(entry.name)
+        if err is not None:
+            yield Finding(
+                rule="REG004", severity="error", subject=entry.name,
+                cell=cell_label(shape, dtype, knobs),
+                message=f"analysis cell cannot be planned: {err}",
+                hint=(
+                    "fix the declared analysis_cells shape/dtype, or the "
+                    "planner rule it trips"
+                ),
+            )
+    for entry in ctx.entries:
+        if entry.name not in seen:
+            yield Finding(
+                rule="REG004", severity="info", subject=entry.name, cell="",
+                message=(
+                    "no analysis cells: not in measure.validate CASES and "
+                    "no analysis_cells declared, so per-cell rules "
+                    "(ALIAS/PAD) cannot judge this kernel"
+                ),
+                hint=(
+                    "declare analysis_cells=[(shape, dtype)] at "
+                    "registration, or add a validation case"
+                ),
+            )

@@ -69,6 +69,13 @@ class KernelEntry:
     # (xent's lse combine, jacobi's halo exchange); None = the generic
     # plan-locally-and-launch body in ``repro.api.spmd``.
     spmd_body: Callable | None = None
+    # Representative (shape, dtype[, knobs]) cells ``repro.analyze`` plans
+    # when walking the registry statically -- knobs is an optional dict of
+    # planner overrides ({"sublanes": ..., "vmem_budget": ...}).  Empty =
+    # the analyzer falls back to the measure/validate representative cells
+    # for the kernel.  Kernels with unusual geometry (fixtures, future
+    # families outside the validation matrix) declare their own.
+    analysis_cells: tuple[tuple, ...] = ()
     doc: str = ""
 
 
@@ -85,6 +92,7 @@ def register_kernel(
     spmd_body: Callable | None = None,
     vmem_buffers: int | None = None,
     col_tiled: bool = False,
+    analysis_cells=(),
     doc: str = "",
 ):
     """Decorator: declare a kernel family's streams and launch body.
@@ -95,7 +103,10 @@ def register_kernel(
     runs fully replicated under a multi-device mesh.  ``spmd_body`` is the
     kernel-owned shard_map body for partitionings that communicate
     (``repro.api.spmd.ShardContext`` first argument); it requires a
-    ``partitioning`` to shard anything in the first place.
+    ``partitioning`` to shard anything in the first place.  ``analysis_cells``
+    are representative ``(shape, dtype)`` pairs the static analyzer
+    (``repro.analyze``) plans for this kernel; omitted, it uses the
+    validation suite's representative cells.
     """
 
     def deco(body: Callable) -> Callable:
@@ -136,6 +147,10 @@ def register_kernel(
             body=body,
             partitioning=partitioning,
             spmd_body=spmd_body,
+            analysis_cells=tuple(
+                (tuple(int(s) for s in cell[0]), str(cell[1]), *cell[2:])
+                for cell in analysis_cells
+            ),
             doc=doc or (body.__doc__ or "").strip(),
         )
         return body
@@ -173,3 +188,10 @@ def list_kernels(*, import_all: bool = True) -> list[str]:
         for module in FAMILY_MODULES.values():
             importlib.import_module(module)
     return sorted(_REGISTRY)
+
+
+def entries(*, import_all: bool = True) -> list[KernelEntry]:
+    """Every registered :class:`KernelEntry`, in name order -- the static
+    analyzer's walk surface (``repro.analyze`` iterates this instead of
+    resolving names one at a time)."""
+    return [_REGISTRY[k] for k in list_kernels(import_all=import_all)]

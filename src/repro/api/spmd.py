@@ -56,8 +56,11 @@ stages) ``spmd_mesh`` returns None and ``launch`` stays single-device.
 """
 from __future__ import annotations
 
+import ast
 import dataclasses
+import inspect
 import logging
+import textwrap
 from typing import Mapping
 
 import jax
@@ -68,7 +71,8 @@ from repro.parallel import rules as rules_lib
 from repro.parallel.shardmap_compat import NO_CHECK, inside_shard_map, shard_map
 
 __all__ = ["Partitioning", "SCALAR", "replicated", "partitioning_for",
-           "spmd_mesh", "spmd_launch", "ShardContext", "shard_specs"]
+           "spmd_mesh", "spmd_launch", "ShardContext", "shard_specs",
+           "consulted_operand_dims"]
 
 _log = logging.getLogger(__name__)
 
@@ -204,6 +208,56 @@ class ShardContext:
         for a in axes:
             idx = idx * int(self.axis_sizes.get(a, 1)) + jax.lax.axis_index(a)
         return idx
+
+
+def consulted_operand_dims(fn) -> frozenset[tuple[int, int]] | None:
+    """``(operand, dim)`` pairs ``fn`` reads via ``ShardContext.axes``.
+
+    Static introspection for ``repro.analyze``'s declaration-drift rule:
+    parses the ``spmd_body``'s source (no execution, no tracing) and
+    collects every ``ctx.axes(operand, dim)`` call on the body's first
+    positional parameter, resolving the defaults ``(0, 0)``.  Returns
+    ``None`` when the source is unavailable (C extension, exec'd code) or
+    when any ``axes`` call takes non-literal arguments -- callers must
+    treat ``None`` as "unknowable", not "consults nothing".
+    """
+    try:
+        tree = ast.parse(textwrap.dedent(inspect.getsource(fn)))
+    except (OSError, TypeError, SyntaxError):
+        return None
+    fndef = next(
+        (n for n in ast.walk(tree)
+         if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))),
+        None,
+    )
+    if fndef is None or not fndef.args.args:
+        return None
+    ctx_name = fndef.args.args[0].arg
+    pairs: set[tuple[int, int]] = set()
+    for node in ast.walk(fndef):
+        if not (isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)
+                and node.func.attr == "axes"
+                and isinstance(node.func.value, ast.Name)
+                and node.func.value.id == ctx_name):
+            continue
+        vals = {"operand": 0, "dim": 0}
+        names = ("operand", "dim")
+        if len(node.args) > len(names):
+            return None
+        for i, arg in enumerate(node.args):
+            if not (isinstance(arg, ast.Constant)
+                    and isinstance(arg.value, int)):
+                return None
+            vals[names[i]] = arg.value
+        for kw in node.keywords:
+            if (kw.arg not in vals
+                    or not isinstance(kw.value, ast.Constant)
+                    or not isinstance(kw.value.value, int)):
+                return None
+            vals[kw.arg] = kw.value.value
+        pairs.add((vals["operand"], vals["dim"]))
+    return frozenset(pairs)
 
 
 def shard_specs(mesh, templates, arrays):

@@ -314,6 +314,16 @@ class KernelPlan:
     def predicted_balance(self) -> float:
         return self.layout.predicted_balance
 
+    @property
+    def leading_stride_bytes(self) -> int:
+        """Bytes between consecutive leading-dim slices of the padded array
+        -- the row stride whose residue class modulo the interleave period
+        decides which controllers a strided walk can reach (paper SS2.2)."""
+        n = self.elem_bytes
+        for s in self.padded_shape[1:]:
+            n *= s
+        return n
+
     # ---- predicted traffic ----------------------------------------------
     def _traffic_bytes(self, elems: int, shape: tuple[int, ...]) -> int:
         major = MAJOR_STREAMS.get(self.kernel, self.signature.n_streams)
@@ -477,6 +487,47 @@ def clear_plan_cache() -> None:
     with _LOCK:
         _CACHE.clear()
         _STATS["hits"] = _STATS["misses"] = 0
+
+
+def stream_stride_facts(
+    plan: KernelPlan,
+    model: InterleavedMemoryModel | None = None,
+) -> dict:
+    """Static layout facts ``repro.analyze`` scores without executing anything.
+
+    Everything here is closed-form arithmetic on the plan's padded geometry
+    and its ``LayoutPlan`` under ``model``'s address->controller map:
+
+    * ``leading_stride_bytes`` / ``stride_gcd_period`` -- the row stride and
+      its gcd with the interleave period.  A stride whose gcd *is* the period
+      (every power of two >= period qualifies) pins a strided walk to one
+      channel: the paper's thrashing condition.
+    * ``start_channels`` -- the controller each planned stream's base address
+      hits at tick zero.  Skewed streams land on distinct channels; a
+      degenerate layout (no skews, no segment shift) piles every stream onto
+      channel 0.
+    * the plan's own balance scores, so rules can report predicted impact.
+    """
+    model = model or _DEFAULT_MODEL
+    stride = plan.leading_stride_bytes
+    period = model.period_bytes
+    gcd = int(np.gcd(stride, period)) if stride else period
+    offsets = plan.layout.offsets_bytes
+    starts = tuple(model.channel(o) for o in offsets)
+    return {
+        "kernel": plan.kernel,
+        "n_streams": plan.signature.n_streams,
+        "leading_stride_bytes": stride,
+        "stride_pow2": stride >= period and (stride & (stride - 1)) == 0,
+        "stride_gcd_period": gcd,
+        "period_bytes": period,
+        "offsets_bytes": offsets,
+        "start_channels": starts,
+        "distinct_start_channels": len(set(starts)),
+        "segment_shift_bytes": plan.layout.segment_shift_bytes,
+        "predicted_balance": plan.predicted_balance,
+        "naive_balance": plan.naive_balance,
+    }
 
 
 def explain(kernel: str, shape, dtype, *, mesh=None,

@@ -28,7 +28,8 @@ def deprecated_wrapper(kernel_name: str, *, resolver=None):
             target = resolver(*args, **kwargs) if resolver else kernel_name
             warnings.warn(
                 f"{fn.__name__}() is deprecated; "
-                f"use repro.api.launch({target!r}, ...)",
+                f"use repro.api.launch({target!r}, ...) "
+                f"(migration table: docs/API.md)",
                 FutureWarning,
                 stacklevel=2,
             )

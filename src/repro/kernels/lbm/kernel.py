@@ -20,7 +20,6 @@ and the conflict-model scoring that predicts which layout balances channels.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -10,7 +10,6 @@ the paper's 512 B segment alignment.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -18,7 +18,6 @@ microbenchmarks on small arrays are not dominated by dispatch overhead
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.kernels.util import INTERPRET, block_rows

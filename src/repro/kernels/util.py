@@ -7,7 +7,6 @@ alignment rule and is centralized here.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -17,7 +17,6 @@ from __future__ import annotations
 
 import dataclasses
 
-import jax
 
 from repro.launch import lowering
 

@@ -53,7 +53,6 @@ def main() -> None:
 
     assert len(jax.devices()) == 512, "dry-run needs 512 placeholder devices"
 
-    meshes = {"pod": False, "multipod": True, "both": None}[args.mesh]
     mesh_kinds = ["pod", "multipod"] if args.mesh == "both" else [args.mesh]
     archs = list(ARCHS) if args.all or not args.arch else [args.arch]
     shapes = list(SHAPES) if args.all or not args.shape else [args.shape]

@@ -18,13 +18,11 @@ compile proof always use the full scanned program.
 from __future__ import annotations
 
 import dataclasses
-import math
 import re
 from typing import Any
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
@@ -34,7 +32,7 @@ from repro.configs import get_config
 from repro.configs.shapes import SHAPES, ShapeSpec, input_specs, shape_applicable
 from repro.core import planner as planner_lib
 from repro.models import build_model
-from repro.models.params import ParamDef, abstract_params, is_def, map_tree
+from repro.models.params import ParamDef, abstract_params, map_tree
 from repro.optim.adamw import AdamWConfig
 from repro.optim.schedules import make_schedule
 from repro.parallel import rules as rules_lib

@@ -133,3 +133,68 @@ def load_profile(path: str, *, strict: bool = True) -> dict:
             plan, provenance=f"profile:{path}"
         )
     return overrides
+
+
+def audit_profile(path: str) -> list[dict]:
+    """Static hygiene check of one profile for ``repro.analyze``.
+
+    Unlike :func:`load_profile` this never raises on a bad cell -- it
+    returns one issue dict per problem (``kind``, ``cell``, ``detail``) so
+    the analyzer can report every stale or orphan override at once:
+
+    * ``orphan``  -- the cell's kernel is no longer in the registry, so no
+      launch can ever consume the override (``PlanContext.plan_overrides``
+      keys by kernel name).
+    * ``stale``   -- re-deriving the plan under the recorded knobs no longer
+      reproduces the recorded geometry: the planner moved since the sweep,
+      and a strict ``load_profile`` of this file will fail.
+    * ``invalid`` -- the entry cannot be planned at all (unknown dtype,
+      unplannable shape, missing fields).
+    """
+    from repro.api import registry
+
+    with open(path) as f:
+        doc = json.load(f)
+    if doc.get("format") != PROFILE_FORMAT:
+        return [{"kind": "invalid", "cell": path,
+                 "detail": f"not a plan profile (format={doc.get('format')!r})"}]
+    registered = set(registry.list_kernels())
+    issues: list[dict] = []
+    for entry in doc.get("entries", ()):
+        kernel = entry.get("kernel", "?")
+        cell = (f"{kernel} {tuple(entry.get('logical_shape', ()))} "
+                f"{entry.get('dtype', '?')}")
+        if kernel not in registered:
+            issues.append({
+                "kind": "orphan", "cell": cell,
+                "detail": f"kernel {kernel!r} is not registered; the "
+                          f"override can never be consumed",
+            })
+            continue
+        try:
+            shape = tuple(int(s) for s in entry["logical_shape"])
+            knobs = entry["knobs"]
+            mesh = tuple((str(a), int(n))
+                         for a, n in entry.get("mesh", ())) or None
+            plan = plan_kernel(
+                kernel, shape, entry["dtype"], mesh=mesh,
+                sublanes=int(knobs["sublanes"]),
+                vmem_budget=int(knobs["vmem_budget"]),
+            )
+        except Exception as e:  # noqa: BLE001 -- report, don't crash the audit
+            issues.append({"kind": "invalid", "cell": cell,
+                           "detail": f"{type(e).__name__}: {e}"})
+            continue
+        expect = entry.get("expect", {})
+        derived = {"padded_shape": list(plan.padded_shape),
+                   "block_shape": list(plan.block_shape)}
+        drift = {k: (expect[k], derived[k]) for k in expect
+                 if expect[k] != derived[k]}
+        if drift:
+            issues.append({
+                "kind": "stale", "cell": cell,
+                "detail": "; ".join(
+                    f"{k}: profiled {a} != derived {b}"
+                    for k, (a, b) in sorted(drift.items())),
+            })
+    return issues

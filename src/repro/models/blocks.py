@@ -7,9 +7,7 @@ regardless of the activation dtype.
 """
 from __future__ import annotations
 
-import dataclasses
 import functools
-from typing import Any
 
 import jax
 import jax.numpy as jnp

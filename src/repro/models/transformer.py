@@ -14,7 +14,6 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
@@ -78,13 +77,11 @@ def param_defs(cfg: ModelConfig) -> Tree:
         tree["lm_head"] = ParamDef((cfg.d_model, cfg.vocab_size),
                                    ("embed", "vocab"), dtype=cfg.adtype)
     has_shared = False
-    moe_layer = 0
     for i, (kind, count) in enumerate(cfg.stages()):
         if kind == "shared_attn":
             has_shared = True
             continue  # single shared subtree added below
         tree[stage_name(i, kind)] = stack_defs(block_defs(cfg, kind), count)
-        moe_layer += count if kind == "moe" else 0
     if has_shared:
         tree["shared_attn"] = block_defs(cfg, "shared_attn")
     return tree

@@ -9,7 +9,6 @@ moments only -- the memory budget note lives in EXPERIMENTS.md SSDry-run.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable
 
 import jax
 import jax.numpy as jnp

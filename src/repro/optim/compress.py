@@ -15,7 +15,6 @@ collectives).  It composes with the trainer via ``grad_fn`` injection.
 """
 from __future__ import annotations
 
-import functools
 from typing import Callable
 
 import jax

@@ -14,7 +14,6 @@ literally the paper's shifted-segment picture in time.
 """
 from __future__ import annotations
 
-import functools
 from typing import Callable
 
 import jax

@@ -15,7 +15,7 @@ from __future__ import annotations
 
 import contextlib
 import contextvars
-from typing import Iterable, Mapping
+from typing import Mapping
 
 import jax
 from jax.sharding import PartitionSpec as P

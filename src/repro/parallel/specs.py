@@ -5,7 +5,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.models.params import ParamDef, is_def, map_tree
+from repro.models.params import ParamDef, map_tree
 from repro.parallel.rules import spec
 
 

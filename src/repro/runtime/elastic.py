@@ -18,7 +18,6 @@ At 1000+-node scale, node loss is routine.  The policy here:
 from __future__ import annotations
 
 import dataclasses
-import math
 
 import jax
 import numpy as np

@@ -9,7 +9,6 @@ from __future__ import annotations
 
 import dataclasses
 import logging
-import time
 from typing import Callable
 
 import jax

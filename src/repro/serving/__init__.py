@@ -1,2 +1,4 @@
 """Serving: continuous batching over the serve_step decode path."""
 from repro.serving.scheduler import ContinuousBatcher, Request
+
+__all__ = ["ContinuousBatcher", "Request"]

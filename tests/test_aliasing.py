@@ -5,10 +5,8 @@ import pytest
 from _hypothesis_compat import given, settings
 from _hypothesis_compat import strategies as st
 
-from repro.core.aliasing import (
-    InterleavedMemoryModel, Stream, analytic_skews, exhaustive_best_skews,
-)
-from repro.core.autotune import StreamSignature, plan_streams, verify_plan_optimal
+from repro.core.aliasing import InterleavedMemoryModel, Stream, analytic_skews
+from repro.core.autotune import StreamSignature, verify_plan_optimal
 
 M = InterleavedMemoryModel()  # T2: 4 controllers, bits 8:7, 64 B lines
 

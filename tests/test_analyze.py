@@ -1,0 +1,402 @@
+"""repro.analyze: one positive and one negative test per rule family,
+baseline gating, fingerprint stability, and the CLI exit-code contract.
+
+Importing ``repro.analyze.fixtures`` registers the seeded-hazard kernels
+(``hazard.*``) for the whole session; ``tests/test_golden_plans.py``
+excludes them from the shipped surface by body-module prefix, and the
+full-registry test below filters the ``hazard.`` prefix explicitly.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+pytest.importorskip("jax")
+
+from repro import api  # noqa: E402
+from repro.analyze import engine, report  # noqa: E402
+from repro.analyze import fixtures as fixtures_mod  # noqa: E402
+from repro.analyze.__main__ import main  # noqa: E402
+from repro.analyze.rules import check_stream_collision  # noqa: E402
+from repro.api import registry  # noqa: E402
+from repro.api.registry import register_kernel  # noqa: E402
+from repro.api.spmd import consulted_operand_dims  # noqa: E402
+from repro.core.aliasing import InterleavedMemoryModel  # noqa: E402
+from repro.core.autotune import LayoutPlan, StreamSignature  # noqa: E402
+from repro.core.layout import VMEM_BYTES  # noqa: E402
+from repro.core.planner import (  # noqa: E402
+    KernelPlan,
+    plan_kernel,
+    stream_stride_facts,
+)
+from repro.measure import profile as profile_lib  # noqa: E402
+
+MODEL = InterleavedMemoryModel()
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+GOLDEN = os.path.join(REPO_ROOT, "tests", "golden", "plans.json")
+
+
+# Two more analysis-only registrations for the REG004 positives (kept out
+# of fixtures.py: a cell the planner *rejects* would fail the repo's own
+# --fixture gate semantics, which seeds hazards the planner can plan).
+# Their bodies live in this test module, so the golden-plan shipped filter
+# never sees them.
+register_kernel(
+    "hazard.badcell",
+    signature=StreamSignature(n_read=1, n_write=1),
+    ref=lambda x: x,
+    plan_args=lambda a, **kw: (tuple(a.shape), str(a.dtype)),
+    analysis_cells=(((3, 3, 3), "float32"),),
+)(lambda plan, *a, **kw: None)
+
+register_kernel(
+    "hazard.nocells",
+    signature=StreamSignature(n_read=1, n_write=1),
+    ref=lambda x: x,
+    plan_args=lambda a, **kw: (tuple(a.shape), str(a.dtype)),
+)(lambda plan, *a, **kw: None)
+
+
+def ctx_for(*names, **kw):
+    return engine.AnalysisContext([api.get_kernel(n) for n in names], **kw)
+
+
+# ---------------------------------------------------------------------------
+# ALIAS
+# ---------------------------------------------------------------------------
+
+class TestAliasing:
+    def test_alias001_fires_on_pow2_stride_fixture(self):
+        found = engine.run(ctx_for("hazard.pow2"), only=["ALIAS001"])
+        assert [f.severity for f in found] == ["warning"]
+        assert "(8, 8192)" in found[0].cell
+        assert "power of two" in found[0].message
+
+    def test_alias001_quiet_on_non_pow2_layouts(self):
+        assert engine.run(ctx_for("jacobi", "rmsnorm"),
+                          only=["ALIAS001"]) == []
+
+    def test_alias002_fires_on_degenerate_layout(self):
+        # Hand-built thrashing plan: three streams page-aligned to the same
+        # controller, no segment shift -- the paper's offset-zero collapse.
+        # The planner never emits this; the rule guards the launch path.
+        sig = StreamSignature(n_read=2, n_write=1, elem_bytes=4)
+        plan = KernelPlan(
+            kernel="stream.add", logical_shape=(4096,), dtype="float32",
+            padded_shape=(8, 512), block_shape=(8, 512), signature=sig,
+            layout=LayoutPlan(align_bytes=MODEL.period_bytes,
+                              offsets_bytes=(0, 0, 0),
+                              segment_shift_bytes=0,
+                              predicted_balance=1.0 / MODEL.n_channels),
+            naive_balance=1.0 / MODEL.n_channels,
+        )
+        found = list(check_stream_collision(plan, MODEL))
+        assert [f.severity for f in found] == ["error"]
+        assert "thrash" in found[0].message
+
+    def test_alias002_quiet_on_planned_skews(self):
+        plan = plan_kernel("stream.add", (99999,), "float32")
+        assert list(check_stream_collision(plan, MODEL)) == []
+        facts = stream_stride_facts(plan, MODEL)
+        assert facts["distinct_start_channels"] == min(
+            facts["n_streams"], MODEL.n_channels)
+
+
+# ---------------------------------------------------------------------------
+# PAD
+# ---------------------------------------------------------------------------
+
+class TestPadding:
+    def test_pad001_fires_on_tiny_stream_fixture(self):
+        found = engine.run(ctx_for("hazard.pow2"), only=["PAD001"])
+        assert any("(16,)" in f.cell for f in found)
+        assert all(f.severity == "warning" for f in found)
+
+    def test_pad001_quiet_within_budget(self):
+        assert engine.run(ctx_for("rmsnorm", "xent"), only=["PAD001"]) == []
+
+    def test_pad002_fires_on_sublane_override_regression(self):
+        found = engine.run(ctx_for("hazard.pow2"), only=["PAD002"])
+        assert [f.severity for f in found] == ["error"]
+        assert "sublanes=32" in found[0].cell
+
+    def test_pad002_quiet_on_native_narrow_plans(self):
+        # The planner's narrow-dtype guarantee holds for every shipped
+        # kernel, so the bf16 probes of their fp32 cells stay quiet.
+        names = [k for k in api.list_kernels()
+                 if not k.startswith("hazard.")]
+        assert engine.run(ctx_for(*names), only=["PAD002"]) == []
+
+
+# ---------------------------------------------------------------------------
+# DRIFT
+# ---------------------------------------------------------------------------
+
+class TestDrift:
+    def test_drift001_fires_on_mismatched_fixture(self):
+        found = engine.run(ctx_for("hazard.drift"), only=["DRIFT001"])
+        sev = {f.cell: f.severity for f in found}
+        # declared vocab split never consulted -> warning; consulted
+        # phantom operand 1 never declared -> error.
+        assert sev == {"operand 0 dim 1": "warning",
+                       "operand 1 dim 0": "error"}
+
+    def test_drift001_quiet_on_jacobi(self):
+        assert engine.run(ctx_for("jacobi"), only=["DRIFT001"]) == []
+
+    def test_drift001_xent_known_finding_only(self):
+        # xent's body consults the logits batch+vocab dims; the labels
+        # operand's declared batch split is the one known (baselined) gap.
+        found = engine.run(ctx_for("xent"), only=["DRIFT001"])
+        assert [(f.cell, f.severity) for f in found] == [
+            ("operand 1 dim 0", "warning")]
+
+    def test_consulted_operand_dims_introspection(self):
+        assert consulted_operand_dims(
+            api.get_kernel("xent").spmd_body) == {(0, 0), (0, 1)}
+        assert consulted_operand_dims(
+            api.get_kernel("jacobi").spmd_body) == {(0, 0)}
+
+        def kw_body(ctx, x):
+            return ctx.axes(operand=1, dim=2)
+
+        assert consulted_operand_dims(kw_body) == {(1, 2)}
+
+        def dynamic_body(ctx, x, i):
+            return ctx.axes(i, 0)
+
+        assert consulted_operand_dims(dynamic_body) is None
+        assert consulted_operand_dims(len) is None
+
+    def test_drift002_fires_on_unpriced_spmd_body(self):
+        found = engine.run(ctx_for("hazard.drift"), only=["DRIFT002"])
+        assert [f.subject for f in found] == ["hazard.drift"]
+        assert "COMM_MODEL" in found[0].message
+
+    def test_drift002_quiet_on_priced_kernels(self):
+        # Subset analysis must not flag the *other* priced kernels as dead:
+        # analyzing only xent must not report jacobi's COMM_MODEL entry.
+        assert engine.run(ctx_for("xent"), only=["DRIFT002"]) == []
+        assert engine.run(ctx_for("jacobi"), only=["DRIFT002"]) == []
+
+
+# ---------------------------------------------------------------------------
+# CACHE
+# ---------------------------------------------------------------------------
+
+def _profile_entry(kernel="rmsnorm", shape=(64, 256), dtype="float32"):
+    plan = plan_kernel(kernel, shape, dtype)
+    return profile_lib.entry_from_plan(
+        plan, {"sublanes": plan.sublanes, "vmem_budget": VMEM_BYTES})
+
+
+class TestCacheHygiene:
+    def test_clean_profile_is_quiet(self, tmp_path):
+        p = str(tmp_path / "clean.json")
+        profile_lib.save_profile(p, [_profile_entry()], backend="cpu")
+        ctx = engine.AnalysisContext([], profile_paths=[p])
+        assert engine.run(ctx, only=["CACHE001", "CACHE002"]) == []
+
+    def test_cache001_orphan_override(self, tmp_path):
+        entry = _profile_entry()
+        entry["kernel"] = "gone.kernel"
+        p = str(tmp_path / "orphan.json")
+        profile_lib.save_profile(p, [entry], backend="cpu")
+        found = engine.run(engine.AnalysisContext([], profile_paths=[p]),
+                           only=["CACHE001"])
+        assert [f.severity for f in found] == ["warning"]
+        assert "gone.kernel" in found[0].cell
+
+    def test_cache002_stale_override(self, tmp_path):
+        entry = _profile_entry()
+        entry["expect"]["padded_shape"] = [999, 999]
+        p = str(tmp_path / "stale.json")
+        profile_lib.save_profile(p, [entry], backend="cpu")
+        found = engine.run(engine.AnalysisContext([], profile_paths=[p]),
+                           only=["CACHE002"])
+        assert [f.severity for f in found] == ["error"]
+        assert "stale" in found[0].message
+        # ...and a strict load of the same file fails at use time: the rule
+        # surfaces exactly the failures load_profile would throw later.
+        with pytest.raises(ValueError, match="planner drift"):
+            profile_lib.load_profile(p)
+
+    def test_cache002_invalid_override(self, tmp_path):
+        entry = _profile_entry()
+        entry["dtype"] = "float31"
+        p = str(tmp_path / "invalid.json")
+        profile_lib.save_profile(p, [entry], backend="cpu")
+        found = engine.run(engine.AnalysisContext([], profile_paths=[p]),
+                           only=["CACHE002"])
+        assert [f.severity for f in found] == ["error"]
+        assert "invalid" in found[0].message
+
+    def test_audit_profile_reports_all_issues_at_once(self, tmp_path):
+        good, orphan, stale = (_profile_entry() for _ in range(3))
+        orphan["kernel"] = "gone.kernel"
+        stale["expect"]["block_shape"] = [1, 1]
+        p = str(tmp_path / "mixed.json")
+        profile_lib.save_profile(p, [good, orphan, stale], backend="cpu")
+        kinds = sorted(i["kind"] for i in profile_lib.audit_profile(p))
+        assert kinds == ["orphan", "stale"]
+
+
+# ---------------------------------------------------------------------------
+# REG
+# ---------------------------------------------------------------------------
+
+class TestRegistryHygiene:
+    def test_reg001_info_on_missing_partitioning(self):
+        found = engine.run(ctx_for("hazard.pow2"), only=["REG001"])
+        assert [f.severity for f in found] == ["info"]
+        assert engine.run(ctx_for("xent", "lbm.soa"), only=["REG001"]) == []
+
+    def test_reg002_missing_ref(self):
+        found = engine.run(ctx_for("hazard.pow2"), only=["REG002"])
+        assert [f.severity for f in found] == ["error"]
+        assert engine.run(ctx_for("xent"), only=["REG002"]) == []
+
+    def test_reg003_golden_coverage(self):
+        found = engine.run(
+            ctx_for("hazard.drift", golden_path=GOLDEN), only=["REG003"])
+        assert [f.severity for f in found] == ["warning"]
+        assert engine.run(ctx_for("stream.copy", golden_path=GOLDEN),
+                          only=["REG003"]) == []
+        # no golden file -> the rule cannot judge and stays silent
+        missing = os.path.join(REPO_ROOT, "no-such-golden.json")
+        assert engine.run(ctx_for("hazard.drift", golden_path=missing),
+                          only=["REG003"]) == []
+
+    def test_reg004_unplannable_cell_and_no_cells(self):
+        found = engine.run(ctx_for("hazard.badcell"), only=["REG004"])
+        assert [f.severity for f in found] == ["error"]
+        assert "cannot be planned" in found[0].message
+        found = engine.run(ctx_for("hazard.nocells"), only=["REG004"])
+        assert [f.severity for f in found] == ["info"]
+        assert engine.run(ctx_for("xent"), only=["REG004"]) == []
+
+
+# ---------------------------------------------------------------------------
+# Engine, baseline, fingerprints
+# ---------------------------------------------------------------------------
+
+class TestEngineAndBaseline:
+    def test_real_registry_quiet_minus_committed_baseline(self):
+        # The CI gate in miniature: the shipped registry against the
+        # committed baseline produces zero NEW gating findings.
+        shipped = [e for e in registry.entries()
+                   if not e.name.startswith("hazard.")]
+        ctx = engine.AnalysisContext(shipped, golden_path=GOLDEN)
+        findings = engine.run(ctx)
+        baseline = report.load_baseline(report.DEFAULT_BASELINE)
+        new, _ = report.split_new(findings, baseline)
+        assert new == [], [f.fingerprint for f in new]
+
+    def test_fixtures_produce_new_findings(self):
+        findings = engine.run(ctx_for(*fixtures_mod.FIXTURE_KERNELS))
+        baseline = report.load_baseline(report.DEFAULT_BASELINE)
+        new, _ = report.split_new(findings, baseline)
+        assert new, "seeded hazards must gate"
+        assert {f.rule for f in new} >= {"ALIAS001", "PAD001", "PAD002",
+                                         "DRIFT001", "DRIFT002", "REG002"}
+
+    def test_fingerprint_ignores_message_wording(self):
+        a = engine.Finding(rule="X001", severity="error", subject="k",
+                           cell="c", message="one wording")
+        b = engine.Finding(rule="X001", severity="warning", subject="k",
+                           cell="c", message="another wording")
+        assert a.fingerprint == b.fingerprint
+        assert a.gating and b.gating
+        info = engine.Finding(rule="X001", severity="info", subject="k",
+                              cell="c", message="advisory")
+        assert not info.gating
+        with pytest.raises(ValueError, match="severity"):
+            engine.Finding(rule="X001", severity="fatal", subject="k",
+                           cell="", message="")
+
+    def test_baseline_roundtrip_and_info_excluded(self, tmp_path):
+        p = str(tmp_path / "b.json")
+        findings = [
+            engine.Finding(rule="A", severity="error", subject="s",
+                           cell="", message="m"),
+            engine.Finding(rule="B", severity="info", subject="s",
+                           cell="", message="m"),
+        ]
+        assert report.save_baseline(p, findings) == 1
+        assert report.load_baseline(p) == {"A|s|"}
+
+    def test_render_marks_baselined(self):
+        f = engine.Finding(rule="A1", severity="warning", subject="s",
+                           cell="c", message="m", hint="h")
+        text = report.render_text([f], {f.fingerprint})
+        assert "(baselined)" in text and "0 new" in text
+        text = report.render_text([f], set())
+        assert "1 new finding" in text
+
+    def test_analysis_cells_knobs_reach_planner(self):
+        ctx = ctx_for("hazard.pow2")
+        cells = ctx.cells_for(api.get_kernel("hazard.pow2"))
+        knobs = [k for _, _, k in cells if k]
+        assert knobs == [{"sublanes": 32}]
+        plan = ctx.plan("hazard.pow2", (8, 1111), "bfloat16",
+                        {"sublanes": 32})
+        assert plan.sublanes == 32
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+class TestCLI:
+    def test_usage_errors(self, capsys):
+        assert main([]) == 2
+        assert main(["--kernel", "no.such.kernel"]) == 2
+        capsys.readouterr()
+
+    def test_clean_kernels_exit_zero(self, capsys):
+        # xent's one DRIFT001 finding is in the committed baseline.
+        assert main(["--kernel", "xent", "--kernel", "jacobi"]) == 0
+        assert "0 new" in capsys.readouterr().out
+
+    def test_hazard_kernel_exits_nonzero(self, capsys):
+        assert main(["--kernel", "hazard.pow2", "--no-baseline"]) == 1
+        assert "ALIAS001" in capsys.readouterr().out
+
+    def test_update_baseline_blesses(self, tmp_path, capsys):
+        p = str(tmp_path / "bless.json")
+        assert main(["--kernel", "hazard.pow2", "--baseline", p,
+                     "--update-baseline"]) == 0
+        assert main(["--kernel", "hazard.pow2", "--baseline", p]) == 0
+        assert "(baselined)" in capsys.readouterr().out
+
+    def test_json_report_out(self, tmp_path, capsys):
+        out_path = str(tmp_path / "report.json")
+        assert main(["--kernel", "hazard.pow2", "--no-baseline",
+                     "--format", "json", "--out", out_path]) == 1
+        capsys.readouterr()
+        with open(out_path) as f:
+            doc = json.load(f)
+        assert doc["new_count"] >= 1
+        assert any(x["rule"] == "ALIAS001" for x in doc["findings"])
+
+    @pytest.mark.slow
+    def test_cli_subprocess_clean_repo(self):
+        # The exact CI invocations, in a process with none of this module's
+        # hazard registrations: the shipped registry vs the committed
+        # baseline exits 0, and the fixture self-test exits 1.
+        env = dict(os.environ)
+        env["PYTHONPATH"] = os.path.join(REPO_ROOT, "src")
+        clean = subprocess.run(
+            [sys.executable, "-m", "repro.analyze", "--all"],
+            cwd=REPO_ROOT, env=env, capture_output=True, text=True,
+            timeout=300,
+        )
+        assert clean.returncode == 0, clean.stdout + clean.stderr
+        seeded = subprocess.run(
+            [sys.executable, "-m", "repro.analyze", "--all", "--fixture"],
+            cwd=REPO_ROOT, env=env, capture_output=True, text=True,
+            timeout=300,
+        )
+        assert seeded.returncode == 1, seeded.stdout + seeded.stderr

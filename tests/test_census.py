@@ -63,3 +63,62 @@ def test_census_wire_bytes():
 def test_census_ignores_non_collectives():
     c = lowering.collective_census("%x = f32[8] add(%a, %b)\n")
     assert lowering.census_total(c) == 0.0
+
+
+def test_census_empty_and_lookalike_programs():
+    """Zero-collective programs: empty text, and ops/variables whose *names*
+    contain collective substrings without being collective ops."""
+    assert lowering.census_total(lowering.collective_census("")) == 0.0
+    hlo = """
+    ENTRY %main {
+      %all-reduce.1 = f32[8]{0} fusion(%a, %b), kind=kLoop, calls=%comp
+      %x = f32[8] add(%all-reduce.1, %b)
+      %cp = f32[8] custom-call(%x), custom_call_target="collective-permute-emu"
+    }
+    """
+    c = lowering.collective_census(hlo)
+    assert all(v["count"] == 0 for v in c.values())
+    assert lowering.census_total(c) == 0.0
+
+
+def test_census_async_start_counted_done_not():
+    """XLA splits collectives into -start/-done pairs when it overlaps them
+    with compute; the wire bytes move once, on the start op."""
+    hlo = """
+  %ar-start = f32[64]{0} all-reduce-start(%p0), channel_id=1, replica_groups=[4,2]<=[8], to_apply=%add
+  %ar-done = f32[64]{0} all-reduce-done(%ar-start)
+  %ag-start = f32[32,8]{1,0} all-gather-start(%p1), channel_id=2, replica_groups=[2,4]<=[8], dimensions={0}
+  %ag-done = f32[32,8]{1,0} all-gather-done(%ag-start)
+"""
+    c = lowering.collective_census(hlo)
+    assert c["all-reduce"]["count"] == 1
+    assert c["all-reduce"]["wire_bytes"] == pytest.approx(
+        2 * (1 / 2) * 64 * 4)
+    assert c["all-gather"]["count"] == 1
+    assert c["all-gather"]["wire_bytes"] == pytest.approx(
+        (3 / 4) * 32 * 8 * 4)
+
+
+def test_census_renamed_vars_and_repeated_collectives():
+    """Fusion rewrites rename result variables freely; every occurrence of
+    the same collective must be counted and summed."""
+    hlo = """
+  %loss_allreduce.7 = f32[128]{0} all-reduce(%p0), replica_groups=[8,2]<=[16], to_apply=%add
+  %fused.comm_1 = f32[128]{0} all-reduce(%p1), replica_groups=[8,2]<=[16], to_apply=%add
+  %z99 = bf16[256]{0} all-reduce(%p2), replica_groups=[1,16]<=[16], to_apply=%add
+"""
+    c = lowering.collective_census(hlo)
+    assert c["all-reduce"]["count"] == 3
+    expected = (2 * (1 / 2) * 128 * 4) * 2 + 2 * (15 / 16) * 256 * 2
+    assert c["all-reduce"]["wire_bytes"] == pytest.approx(expected)
+    assert lowering.census_total(c) == pytest.approx(expected)
+
+
+def test_census_missing_replica_groups_moves_nothing():
+    """A collective with no parseable replica_groups is group-size 1: it is
+    counted (the op exists) but the ring model prices zero wire bytes."""
+    c = lowering.collective_census(
+        "%ar = f32[64]{0} all-reduce(%p0), to_apply=%add\n")
+    assert c["all-reduce"]["count"] == 1
+    assert c["all-reduce"]["wire_bytes"] == 0.0
+    assert c["all-reduce"]["result_bytes"] == 64 * 4

@@ -33,9 +33,11 @@ SWEEP_CELL = ("rmsnorm", (1016, 1111), "float32")
 class TestMeasuredVsPredicted:
     def test_every_family_has_a_case_and_tolerance(self):
         for kernel in api.list_kernels():
-            # ad-hoc kernels registered by other tests are not shipped
-            # surface and carry no validation cell
-            if not api.get_kernel(kernel).body.__module__.startswith("repro."):
+            # ad-hoc kernels registered by other tests and the analysis-only
+            # hazard fixtures are not shipped surface: no validation cell
+            module = api.get_kernel(kernel).body.__module__
+            if (not module.startswith("repro.")
+                    or module.startswith("repro.analyze.")):
                 continue
             assert kernel in validate_lib.CASES, kernel
             assert kernel.split(".")[0] in validate_lib.TOLERANCES, kernel

@@ -161,7 +161,6 @@ class TestMoE:
         out_id, _ = moe_mod.apply_moe(p, x, cfg)
         p2 = dict(p)
         perm = moe_mod.expert_permutation(8, 4, layer=3).astype(jnp.int32)
-        inv = jnp.argsort(jnp.asarray(perm))
         # permute stored experts consistently with the table
         for w in ("wi", "wg", "wo"):
             p2[w] = p[w][jnp.asarray(perm)]

@@ -1,6 +1,5 @@
 """Sharding-rules unit tests: spec mapping, dedup, divisibility fallback,
 per-arch layout policy, shape applicability, cost pattern units."""
-import jax
 import pytest
 from jax.sharding import PartitionSpec as P
 

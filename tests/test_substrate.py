@@ -1,7 +1,5 @@
 """Substrate tests: optimizer, schedules, compression, data, checkpoint,
 trainer fault tolerance, elastic planning, skewed placement."""
-import os
-import shutil
 
 import jax
 import jax.numpy as jnp
