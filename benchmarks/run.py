@@ -1,20 +1,78 @@
 """Benchmark driver: one section per paper table/figure + the roofline
-report.  Prints ``name,us_per_call,derived`` CSV (assignment convention)."""
+report.  Prints ``name,us_per_call,derived`` CSV (assignment convention)
+by default; ``--json [PATH]`` emits a versioned machine-readable document
+instead so CI can archive the perf trajectory as ``BENCH_*.json``
+artifacts and diff runs across commits."""
 from __future__ import annotations
 
+import argparse
+import json
+import os
+import sys
 
-def main() -> None:
+if __package__ in (None, ""):   # script invocation: python benchmarks/run.py
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+
+BENCH_FORMAT = "repro.bench"
+BENCH_VERSION = 1
+
+
+def collect_rows() -> list[tuple[str, float, str]]:
+    """Every benchmark row: paper figures, the MoE skew table, roofline."""
     from benchmarks import moe_skew, paper_figures, roofline
 
-    print("name,us_per_call,derived")
+    rows: list[tuple[str, float, str]] = []
     for fn in paper_figures.ALL:
-        for name, us, derived in fn():
-            print(f"{name},{us:.2f},{derived}")
-    for name, us, derived in moe_skew.rows():
+        rows.extend(fn())
+    rows.extend(moe_skew.rows())
+    rows.extend(roofline.rows())
+    return rows
+
+
+def to_document(rows) -> dict:
+    """Versioned schema for archived benchmark runs.  ``derived`` stays a
+    string (each section formats its own GB/s / GLUP/s / ratio payload);
+    consumers key on (format, version) before parsing further."""
+    import jax
+
+    return {
+        "format": BENCH_FORMAT,
+        "version": BENCH_VERSION,
+        "backend": jax.default_backend(),
+        "jax_version": jax.__version__,
+        "rows": [
+            {"name": name, "us_per_call": round(float(us), 2),
+             "derived": str(derived)}
+            for name, us, derived in rows
+        ],
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description="run every benchmark section")
+    ap.add_argument("--json", nargs="?", const="-", default=None,
+                    metavar="PATH",
+                    help="emit a versioned JSON document (to PATH, or "
+                         "stdout with no argument) instead of CSV")
+    args = ap.parse_args(argv)
+
+    rows = collect_rows()
+    if args.json is not None:
+        doc = to_document(rows)
+        if args.json == "-":
+            json.dump(doc, sys.stdout, indent=1)
+            print()
+        else:
+            with open(args.json, "w") as f:
+                json.dump(doc, f, indent=1)
+            print(f"wrote {len(doc['rows'])} rows -> {args.json}")
+        return 0
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
         print(f"{name},{us:.2f},{derived}")
-    for name, us, derived in roofline.rows():
-        print(f"{name},{us:.2f},{derived}")
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

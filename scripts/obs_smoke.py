@@ -1,0 +1,55 @@
+"""Obs smoke: launch a kernel under a JSONL sink and sanity-check the stream.
+
+Tier-1 stage (scripts/tier1.sh): proves the observability bus wires end to
+end -- a real ``api.launch`` under ``obs.session(JsonlSink(...))`` leaves a
+parseable event stream with plan-cache provenance in it -- and leaves the
+stream on disk for ``python -m repro.obs.report`` (the next stage) to
+aggregate.  Usage: ``python scripts/obs_smoke.py [out.jsonl]``.
+"""
+import json
+import sys
+
+sys.path.insert(0, "src")
+
+
+def main() -> int:
+    out = sys.argv[1] if len(sys.argv) > 1 else "/tmp/obs_smoke.jsonl"
+
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro import api, obs
+
+    x = jnp.arange(2000, dtype=jnp.float32)
+    with obs.session(obs.JsonlSink(out)) as active:
+        y = api.launch("stream.scale", x, s=2.0)
+        api.launch("stream.scale", x, s=2.0)     # second launch: cache hit
+        api.plan_for("rmsnorm", (64, 256), "float32")
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x) * 2.0)
+    assert len(active) == 1, active
+
+    with open(out) as f:
+        records = [json.loads(line) for line in f]
+    kinds = [r["kind"] for r in records]
+    assert kinds.count("plan") >= 3, kinds
+    caches = {r["cache"] for r in records if r["kind"] == "plan"}
+    assert {"hit", "miss"} <= caches, caches
+
+    # The default (no session) must deliver nothing to any sink.
+    from repro.obs import sinks as sinks_lib
+
+    calls = []
+    orig = sinks_lib.NullSink.emit
+    sinks_lib.NullSink.emit = lambda self, e: calls.append(e)
+    try:
+        api.launch("stream.scale", x, s=2.0)
+    finally:
+        sinks_lib.NullSink.emit = orig
+    assert not calls, f"{len(calls)} sink call(s) with obs disabled"
+
+    print(f"obs smoke ok: {len(records)} event(s) -> {out}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -18,7 +18,15 @@ python scripts/api_smoke.py
 VALIDATION_OUT="${TIER1_VALIDATION_OUT:-$(mktemp "${TMPDIR:-/tmp}/tier1_validation.XXXXXX")}"
 python -m repro.measure.validate --family stream --out "$VALIDATION_OUT"
 echo "tier1: validation report at $VALIDATION_OUT"
-# Stage 3: static analysis -- the layout-hazard/declaration linter over
+# Stage 3: obs smoke -- one kernel launched under a JSONL sink (the
+# observability bus end to end, docs/OBS.md), then the report CLI must
+# aggregate the stream cleanly.  Same mktemp discipline as the validation
+# report; set TIER1_OBS_OUT to pin a path (CI uploads it as an artifact).
+OBS_OUT="${TIER1_OBS_OUT:-$(mktemp "${TMPDIR:-/tmp}/tier1_obs.XXXXXX")}"
+python scripts/obs_smoke.py "$OBS_OUT"
+python -m repro.obs.report "$OBS_OUT"
+echo "tier1: obs event stream at $OBS_OUT"
+# Stage 4: static analysis -- the layout-hazard/declaration linter over
 # the shipped registry vs the committed baseline (docs/ANALYZE.md), plus
 # ruff when the environment has it (CI always does; the dev container may
 # not, and the analyzer is the part that guards the planner invariants).
@@ -28,6 +36,6 @@ if command -v ruff >/dev/null 2>&1; then
 else
   echo "tier1: ruff not installed, skipping lint (CI runs it)"
 fi
-# Stage 4: fast test matrix (full sweeps carry the `sweep` marker and run
+# Stage 5: fast test matrix (full sweeps carry the `sweep` marker and run
 # out-of-band: pytest -m sweep).
 exec python -m pytest -q -m "not slow and not sweep" "$@"

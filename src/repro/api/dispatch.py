@@ -30,7 +30,9 @@ import numpy as np
 from repro.api import context as context_lib
 from repro.api import registry as registry_lib
 from repro.api import spmd as spmd_lib
-from repro.core.planner import KernelPlan, plan_kernel
+from repro.core.planner import KernelPlan, plan_cache_info, plan_kernel
+from repro.obs import bus as obs_bus
+from repro.obs import events as obs_events
 
 __all__ = ["launch", "plan_for", "explain", "ref"]
 
@@ -58,8 +60,20 @@ def plan_for(kernel: str, shape, dtype, *, ctx=None,
         # A pinned plan applies only to the exact case it was built for;
         # the same kernel launched at any other shape/dtype falls through
         # to the planner (real runs launch one kernel at many shapes).
+        if obs_bus.enabled():
+            obs_bus.emit(obs_events.PlanEvent(
+                kernel=entry.name, shape=tuple(override.logical_shape),
+                dtype=override.dtype, cache="override",
+                source=override.provenance, local=bool(local),
+                mesh=tuple(override.mesh)))
         return override
-    return plan_kernel(
+    # Observed plans report whether the memoized planner cache served them:
+    # the miss counter moving across this call is the hit/miss signal (the
+    # cache is process-global, so concurrent planning threads can at worst
+    # misattribute a hit -- telemetry, not accounting).
+    track = obs_bus.enabled()
+    misses_before = plan_cache_info()["misses"] if track else 0
+    plan = plan_kernel(
         entry.name, shape, dtype,
         mesh=ctx.mesh,
         model=ctx.model,
@@ -67,6 +81,14 @@ def plan_for(kernel: str, shape, dtype, *, ctx=None,
         vmem_budget=ctx.vmem_budget,
         local=local,
     )
+    if track:
+        cache = ("miss" if plan_cache_info()["misses"] > misses_before
+                 else "hit")
+        obs_bus.emit(obs_events.PlanEvent(
+            kernel=entry.name, shape=tuple(plan.logical_shape),
+            dtype=plan.dtype, cache=cache, source=plan.provenance,
+            local=bool(local), mesh=tuple(plan.mesh)))
+    return plan
 
 
 def _matches(entry, plan: KernelPlan, shape, dtype) -> bool:
@@ -149,6 +171,14 @@ def _warn_spmd_shadowed_overrides(entry, mesh, arrays, scalars) -> None:
     )
     if not offending:
         return
+    if obs_bus.enabled():
+        # The event is per-occurrence (the report counts live hazards);
+        # only the human-facing warning below dedups per (kernel, mesh).
+        obs_bus.emit(obs_events.SpmdOverrideShadowEvent(
+            kernel=entry.name,
+            mesh=tuple(zip(tuple(mesh.axis_names),
+                           tuple(mesh.devices.shape))),
+            global_shape=gshape, cells=tuple(offending)))
     mesh_key = (entry.name, tuple(mesh.axis_names),
                 tuple(mesh.devices.shape))
     if mesh_key in _SPMD_OVERRIDE_WARNED:

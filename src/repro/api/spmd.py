@@ -67,6 +67,8 @@ import jax
 from jax.sharding import PartitionSpec as P
 
 from repro.api import context as context_lib
+from repro.obs import bus as obs_bus
+from repro.obs import events as obs_events
 from repro.parallel import rules as rules_lib
 from repro.parallel.shardmap_compat import NO_CHECK, inside_shard_map, shard_map
 
@@ -330,6 +332,14 @@ def _log_fallbacks(entry, mesh, arrays, fallbacks) -> None:
     detail.  See docs/SPMD.md ('Communication-minimal partitionings')."""
     if not fallbacks:
         return
+    if obs_bus.enabled():
+        # Every degraded launch emits (the obs report counts occurrences);
+        # only the human-facing log line below dedups per site.
+        obs_bus.emit(obs_events.SpmdFallbackEvent(
+            kernel=entry.name,
+            mesh=tuple(zip(tuple(mesh.axis_names),
+                           tuple(mesh.devices.shape))),
+            reasons=tuple(fallbacks)))
     key = (entry.name,
            tuple(tuple(int(s) for s in a.shape) for a in arrays),
            tuple(mesh.axis_names), tuple(mesh.devices.shape))

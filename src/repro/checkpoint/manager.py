@@ -109,6 +109,10 @@ class CheckpointManager:
         return _unflatten_into(like, flat)
 
     def restore_latest(self, like: Any) -> tuple[int, Any] | None:
+        # Settle any in-flight async save first: a save() scheduled before
+        # this call must be selectable, not invisibly racing the directory
+        # listing (the trainer's failure path restores right after saves).
+        self.wait()
         step = self.latest_step()
         if step is None:
             return None

@@ -11,6 +11,7 @@ deterministic pipeline.  On a real pod this script is invoked once per host
 from __future__ import annotations
 
 import argparse
+import contextlib
 import dataclasses
 import logging
 
@@ -34,6 +35,11 @@ def main() -> None:
                          " its swept cells override the analytic planner"
                          " (on an SPMD mesh, cells match per-shard local"
                          " shapes -- see docs/SPMD.md)")
+    ap.add_argument("--obs-jsonl", default=None,
+                    help="stream observability events (plan cache, SPMD"
+                         " fallbacks, step metrics -- see docs/OBS.md) to"
+                         " this JSONL file; aggregate with"
+                         " python -m repro.obs.report")
     args = ap.parse_args()
     logging.basicConfig(level=logging.INFO,
                         format="%(asctime)s %(name)s %(message)s")
@@ -107,8 +113,16 @@ def main() -> None:
         ctx_kw["plan_overrides"] = load_profile(args.plan_profile)
         logging.info("plan profile %s: %d swept cell(s)",
                      args.plan_profile, len(ctx_kw["plan_overrides"]))
+    # Observability: --obs-jsonl streams the run's events (plan-cache
+    # provenance, SPMD fallbacks, per-step metrics, checkpoints) to a
+    # record-per-line file the report CLI aggregates.  Without the flag the
+    # bus stays on its NullSink default and instrumentation costs nothing.
+    from repro import obs
+
+    obs_scope = (obs.session(obs.JsonlSink(args.obs_jsonl))
+                 if args.obs_jsonl else contextlib.nullcontext())
     with api.plan_context(mesh=plan_mesh, **ctx_kw), \
-            rules_lib.use_rules(rules, mesh=plan_mesh):
+            rules_lib.use_rules(rules, mesh=plan_mesh), obs_scope:
         from repro.models import blocks
 
         logging.info("kernel launch path: %s",
@@ -116,6 +130,9 @@ def main() -> None:
                      else "fused single-device" if blocks.use_fused_kernels()
                      else "jnp fallback")
         metrics = trainer.train(jax.random.PRNGKey(0))
+    if args.obs_jsonl:
+        logging.info("obs event stream at %s (summarize: python -m "
+                     "repro.obs.report %s)", args.obs_jsonl, args.obs_jsonl)
     print(f"done: {len(metrics)} steps, "
           f"loss {metrics[0]['loss']:.3f} -> {metrics[-1]['loss']:.3f}")
 

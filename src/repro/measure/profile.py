@@ -33,6 +33,7 @@ import json
 import os
 import warnings
 
+from repro import obs
 from repro.core.planner import KernelPlan, plan_kernel
 
 PROFILE_FORMAT = "repro.plan_profile"
@@ -125,6 +126,14 @@ def load_profile(path: str, *, strict: bool = True) -> dict:
                 + "; ".join(f"{k}: profiled {a} != derived {b}"
                             for k, (a, b) in drift.items())
             )
+            if obs.enabled():
+                # Streamed before strict raises: a production loader that
+                # dies on drift still leaves the event in the stream.
+                obs.emit(obs.ProfileDriftEvent(
+                    path=path, cell=f"{kernel} {shape} {dtype}",
+                    detail="; ".join(
+                        f"{k}: profiled {a} != derived {b}"
+                        for k, (a, b) in sorted(drift.items()))))
             if strict:
                 raise ValueError(msg)
             warnings.warn(msg + " -- entry skipped", stacklevel=2)

@@ -47,6 +47,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import api
+from repro import obs
 from repro.launch import lowering
 
 OUT_DEFAULT = "results/validation.json"
@@ -211,6 +212,12 @@ def validate_comm_kernel(kernel: str, mesh, *, shape=None, dtype=None) -> dict:
         ratio = 0.0 if measured == 0 else float("inf")
     tol = COMM_TOLERANCES[kernel]
     ok = tol.holds(ratio) if predicted else measured == 0
+    if obs.enabled():
+        obs.emit(obs.ValidationEvent(
+            kernel=kernel, family=kernel.split(".")[0], check="comm",
+            predicted_bytes=float(predicted), measured_bytes=float(measured),
+            ratio=ratio, status="ok" if ok else "fail",
+            mesh=tuple(sorted(_mesh_sizes(mesh).items()))))
     return {
         "kernel": kernel,
         "family": kernel.split(".")[0],
@@ -307,6 +314,12 @@ def validate_kernel(kernel: str, *, shape=None, dtype=None) -> dict:
     predicted = plan.predicted_hbm_bytes
     ratio = measured["bytes"] / predicted if predicted else 0.0
     tol = TOLERANCES[family]
+    if obs.enabled():
+        obs.emit(obs.ValidationEvent(
+            kernel=kernel, family=family, check="hbm",
+            predicted_bytes=float(predicted),
+            measured_bytes=float(measured["bytes"]),
+            ratio=ratio, status="ok" if tol.holds(ratio) else "fail"))
     return {
         "kernel": kernel,
         "family": family,
@@ -388,8 +401,21 @@ def main(argv=None) -> int:
     ap.add_argument("--mesh", default="2x4",
                     help="DxM (data x model) host mesh for --comm")
     ap.add_argument("--out", default=OUT_DEFAULT)
+    ap.add_argument("--obs-jsonl", default=None,
+                    help="stream per-check events (repro.obs) to this JSONL "
+                         "file; aggregate with python -m repro.obs.report")
     args = ap.parse_args(argv)
 
+    if args.obs_jsonl:
+        # One observability session around the whole run: every validation
+        # record (and the plan events its planning emits) streams to the
+        # file alongside the merged JSON report.
+        with obs.session(obs.JsonlSink(args.obs_jsonl)):
+            return _run(ap, args)
+    return _run(ap, args)
+
+
+def _run(ap, args) -> int:
     if args.comm:
         mesh = mesh_from_spec(args.mesh)
         if args.kernel:

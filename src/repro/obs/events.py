@@ -1,0 +1,223 @@
+"""Typed observability events: the vocabulary of the bus.
+
+Every event is a small frozen dataclass with a class-level ``kind`` tag
+and a wall-clock timestamp.  The taxonomy mirrors the repo's existing
+*offline* checks, promoted to streaming form (docs/OBS.md):
+
+  * ``PlanEvent``            -- one ``plan_for`` resolution: plan-cache
+                                hit/miss plus where the layout decision
+                                came from (analytic / override / profile).
+  * ``SpmdFallbackEvent``    -- a declared sharding degraded to
+                                replication (``rules.spec_report``'s
+                                divisibility fallback), with the reasons.
+  * ``SpmdOverrideShadowEvent`` -- plan overrides keyed at a global shape
+                                under an SPMD launch: inert cells.
+  * ``ValidationEvent``      -- one measured-vs-predicted record
+                                (``measure.validate``): HBM bytes or
+                                comm wire bytes against the plan's model.
+  * ``TrainStepEvent``       -- one trainer step's metrics.
+  * ``CheckpointEvent``      -- a checkpoint save/restore.
+  * ``AdmissionEvent``       -- the batcher admitted a request to a slot.
+  * ``BatcherTickEvent``     -- one decode tick's occupancy/packing state.
+  * ``ProfileDriftEvent``    -- a swept profile cell no longer reproduces
+                                its recorded geometry (planner drift).
+
+Events serialize with :meth:`Event.to_record` -- a flat JSON-safe dict
+with ``kind`` and ``ts`` first -- which is exactly what ``JsonlSink``
+writes and ``python -m repro.obs.report`` aggregates.  Producers build
+events only when the bus is enabled (``repro.obs.bus.enabled``), so the
+taxonomy costs nothing when no sink is listening.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import ClassVar
+
+__all__ = [
+    "Event",
+    "PlanEvent",
+    "SpmdFallbackEvent",
+    "SpmdOverrideShadowEvent",
+    "ValidationEvent",
+    "TrainStepEvent",
+    "CheckpointEvent",
+    "AdmissionEvent",
+    "BatcherTickEvent",
+    "ProfileDriftEvent",
+    "EVENT_KINDS",
+]
+
+
+def _jsonable(v):
+    """Tuples -> lists (recursively) so records round-trip through JSON."""
+    if isinstance(v, (tuple, list)):
+        return [_jsonable(x) for x in v]
+    if isinstance(v, dict):
+        return {str(k): _jsonable(x) for k, x in v.items()}
+    return v
+
+
+@dataclasses.dataclass(frozen=True)
+class Event:
+    """Base event: a ``kind`` tag plus the emission wall-clock time."""
+
+    kind: ClassVar[str] = "event"
+
+    ts: float = dataclasses.field(default_factory=time.time, kw_only=True)
+
+    def to_record(self) -> dict:
+        """Flat JSON-safe dict: ``{"kind": ..., "ts": ..., <fields>}``."""
+        rec = {"kind": self.kind, "ts": self.ts}
+        for f in dataclasses.fields(self):
+            if f.name == "ts":
+                continue
+            rec[f.name] = _jsonable(getattr(self, f.name))
+        return rec
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanEvent(Event):
+    """One ``api.plan_for`` resolution, with provenance.
+
+    ``cache`` is "hit"/"miss" for planner-derived plans and "override"
+    when a ``plan_overrides`` pin short-circuited the planner; ``source``
+    is the plan's provenance ("analytic", "profile:<path>", ...).
+    """
+
+    kind: ClassVar[str] = "plan"
+
+    kernel: str
+    shape: tuple
+    dtype: str
+    cache: str
+    source: str = "analytic"
+    local: bool = False
+    mesh: tuple = ()
+
+
+@dataclasses.dataclass(frozen=True)
+class SpmdFallbackEvent(Event):
+    """A declared sharding fell back to replication on this launch."""
+
+    kind: ClassVar[str] = "spmd_fallback"
+
+    kernel: str
+    mesh: tuple
+    reasons: tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class SpmdOverrideShadowEvent(Event):
+    """Plan-override cells keyed at the global shape of an SPMD launch --
+    they can never match the per-shard local shapes, so the pin is inert."""
+
+    kind: ClassVar[str] = "spmd_override_shadow"
+
+    kernel: str
+    mesh: tuple
+    global_shape: tuple
+    cells: tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class ValidationEvent(Event):
+    """One measured-vs-predicted record (``repro.measure.validate``).
+
+    ``check`` is "hbm" (compiled bytes-accessed vs predicted_hbm_bytes)
+    or "comm" (collective-census wire bytes vs predicted_comm_bytes).
+    """
+
+    kind: ClassVar[str] = "validation"
+
+    kernel: str
+    family: str
+    check: str
+    predicted_bytes: float
+    measured_bytes: float
+    ratio: float
+    status: str
+    mesh: tuple = ()
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainStepEvent(Event):
+    """One optimizer step's metrics (the structured form of the trainer's
+    legacy ``metrics`` list-of-dicts)."""
+
+    kind: ClassVar[str] = "train_step"
+
+    step: int
+    loss: float
+    grad_norm: float
+    step_s: float = 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class CheckpointEvent(Event):
+    """A checkpoint transition: ``action`` is "save" or "restore"."""
+
+    kind: ClassVar[str] = "checkpoint"
+
+    step: int
+    action: str
+
+
+@dataclasses.dataclass(frozen=True)
+class AdmissionEvent(Event):
+    """The continuous batcher admitted a request into a decode slot."""
+
+    kind: ClassVar[str] = "admission"
+
+    rid: int
+    slot: int
+    queue_depth: int
+
+
+@dataclasses.dataclass(frozen=True)
+class BatcherTickEvent(Event):
+    """One serve tick's slot occupancy and packing state.
+
+    ``pad_slots`` is the tile-padding overhead the planner chose
+    (physical minus requested slots); ``free_slots`` is requested slots
+    with no tenant.  Together they are the tick's packing waste: rows the
+    decode batch computes that serve no request.
+    """
+
+    kind: ClassVar[str] = "batcher_tick"
+
+    tick: int
+    n_prefill: int
+    n_decode: int
+    slots: int
+    padded_slots: int
+    free_slots: int
+    pad_slots: int
+    queue_depth: int
+
+
+@dataclasses.dataclass(frozen=True)
+class ProfileDriftEvent(Event):
+    """A swept profile cell no longer reproduces its recorded geometry."""
+
+    kind: ClassVar[str] = "profile_drift"
+
+    path: str
+    cell: str
+    detail: str
+
+
+EVENT_KINDS: dict[str, type[Event]] = {
+    cls.kind: cls
+    for cls in (
+        PlanEvent,
+        SpmdFallbackEvent,
+        SpmdOverrideShadowEvent,
+        ValidationEvent,
+        TrainStepEvent,
+        CheckpointEvent,
+        AdmissionEvent,
+        BatcherTickEvent,
+        ProfileDriftEvent,
+    )
+}

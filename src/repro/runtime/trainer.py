@@ -9,11 +9,13 @@ from __future__ import annotations
 
 import dataclasses
 import logging
+import time
 from typing import Callable
 
 import jax
 
 from repro import api
+from repro import obs
 from repro.checkpoint.manager import CheckpointManager
 from repro.data.pipeline import DataConfig, make_batch
 from repro.optim import adamw
@@ -80,6 +82,8 @@ class Trainer:
         if restored is not None:
             step, state = restored
             log.info("restored checkpoint at step %d", step)
+            if obs.enabled():
+                obs.emit(obs.CheckpointEvent(step=step, action="restore"))
             return step, state
         return 0, state
 
@@ -97,17 +101,33 @@ class Trainer:
             try:
                 if fail_injector is not None:
                     fail_injector(step)
+                t0 = time.perf_counter()
                 batch = make_batch(self.data_cfg, step, self.sharding)
                 state, metrics = self.step_fn(state, batch)
                 loss = float(metrics["loss"])
+                grad_norm = float(metrics["grad_norm"])
+                # The float() casts above block on the device, so the wall
+                # time spans the whole step, not just dispatch.  Step
+                # metrics are *events* on the obs bus (structured, typed);
+                # the list below is the legacy return surface, kept so
+                # existing callers (launch/train.py, tests) see the same
+                # list-of-dicts they always did.
+                step_s = time.perf_counter() - t0
                 self.metrics.append({"step": step, "loss": loss,
-                                     "grad_norm": float(metrics["grad_norm"])})
+                                     "grad_norm": grad_norm})
+                if obs.enabled():
+                    obs.emit(obs.TrainStepEvent(
+                        step=step, loss=loss, grad_norm=grad_norm,
+                        step_s=step_s))
                 if step % self.tcfg.log_every == 0:
                     log.info("step %d loss %.4f", step, loss)
                 step += 1
                 retries = 0
                 if step % self.tcfg.ckpt_every == 0:
                     self.ckpt.save(step, state, meta={"loss": loss})
+                    if obs.enabled():
+                        obs.emit(obs.CheckpointEvent(step=step,
+                                                     action="save"))
             except Exception as e:  # noqa: BLE001 -- the whole point
                 retries += 1
                 if retries > self.tcfg.max_retries:
@@ -116,7 +136,12 @@ class Trainer:
                 restored = self.ckpt.restore_latest(state)
                 if restored is not None:
                     step, state = restored
+                    if obs.enabled():
+                        obs.emit(obs.CheckpointEvent(step=step,
+                                                     action="restore"))
                 # else: replay from current state (failure before 1st ckpt)
         self.ckpt.save(step, state, meta={"final": True})
         self.ckpt.wait()
+        if obs.enabled():
+            obs.emit(obs.CheckpointEvent(step=step, action="save"))
         return self.metrics

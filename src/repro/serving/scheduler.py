@@ -32,6 +32,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import api
+from repro import obs
 from repro.models.params import init_params
 from repro.parallel import steps as steps_lib
 
@@ -150,9 +151,13 @@ class ContinuousBatcher:
         admitted = False
         for s in range(self.slots):
             if self.slot_req[s] is None and self.queue:
-                self.slot_req[s] = self.queue.popleft()
+                req = self.queue.popleft()
+                self.slot_req[s] = req
                 self.cache = self._reset_slot(self.cache, s)
                 admitted = True
+                if obs.enabled():
+                    obs.emit(obs.AdmissionEvent(
+                        rid=req.rid, slot=s, queue_depth=len(self.queue)))
         if admitted:
             self._note_admitted_plans()
 
@@ -171,6 +176,21 @@ class ContinuousBatcher:
                                       jnp.asarray(feed))
         nxt = np.asarray(nxt)[:, 0]
         self.ticks += 1
+        if obs.enabled():
+            # Packing waste is the tick's dead rows: slots with no tenant
+            # (free) plus the tile padding the planner chose (pad).  Both
+            # rows run through the decode step anyway -- the signal the
+            # report aggregates into a mean waste fraction.
+            n_prefill = sum(r is not None and r.prefilling
+                            for r in self.slot_req)
+            n_decode = sum(r is not None and not r.prefilling
+                           for r in self.slot_req)
+            obs.emit(obs.BatcherTickEvent(
+                tick=self.ticks, n_prefill=n_prefill, n_decode=n_decode,
+                slots=self.slots, padded_slots=self.padded_slots,
+                free_slots=self.slots - n_prefill - n_decode,
+                pad_slots=self.padded_slots - self.slots,
+                queue_depth=len(self.queue)))
         for s, req in enumerate(self.slot_req):
             if req is None:
                 continue
