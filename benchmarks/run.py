@@ -20,13 +20,14 @@ BENCH_VERSION = 1
 
 def collect_rows() -> list[tuple[str, float, str]]:
     """Every benchmark row: paper figures, the MoE skew table, roofline."""
-    from benchmarks import moe_skew, paper_figures, roofline
+    from benchmarks import moe_skew, paper_figures, roofline, serving_load
 
     rows: list[tuple[str, float, str]] = []
     for fn in paper_figures.ALL:
         rows.extend(fn())
     rows.extend(moe_skew.rows())
     rows.extend(roofline.rows())
+    rows.extend(serving_load.rows())
     return rows
 
 

@@ -19,7 +19,7 @@ from repro.api.context import (
     reset_default_context,
     set_default_context,
 )
-from repro.api.dispatch import explain, launch, plan_for, ref
+from repro.api.dispatch import explain, launch, plan_for, plan_tile, ref
 from repro.api.registry import (
     FAMILY_MODULES,
     KernelEntry,
@@ -32,7 +32,7 @@ from repro.api.spmd import SCALAR, Partitioning, spmd_mesh
 __all__ = [
     "PlanContext", "plan_context", "current_context",
     "set_default_context", "get_default_context", "reset_default_context",
-    "launch", "plan_for", "explain", "ref",
+    "launch", "plan_for", "plan_tile", "explain", "ref",
     "register_kernel", "get_kernel", "list_kernels",
     "KernelEntry", "FAMILY_MODULES",
     "Partitioning", "SCALAR", "spmd_mesh",

@@ -91,6 +91,22 @@ def plan_for(kernel: str, shape, dtype, *, ctx=None,
     return plan
 
 
+def plan_tile(kernel: str, shape, dtype, *, vmem_budget: int | None = None,
+              ctx=None, mesh=None) -> KernelPlan:
+    """Page/tile-size plan query: the plan of ``kernel`` over ``shape`` with
+    an explicit per-tile ``vmem_budget`` layered onto the ambient (or
+    given) context.  The serving paged KV cache sizes its pages from the
+    returned plan's ``block_rows`` (serving.paged_cache.plan_page_geometry)
+    -- the same closed-form block chooser that tiles every kernel launch,
+    so cache pages and kernel blocks follow one layout policy."""
+    ctx = ctx or context_lib.current_context()
+    if mesh is not None:
+        ctx = ctx.evolve(mesh=mesh)
+    if vmem_budget is not None:
+        ctx = ctx.evolve(vmem_budget=int(vmem_budget))
+    return plan_for(kernel, shape, dtype, ctx=ctx)
+
+
 def _matches(entry, plan: KernelPlan, shape, dtype) -> bool:
     return (plan.kernel == entry.name
             and tuple(plan.logical_shape) == tuple(int(s) for s in shape)

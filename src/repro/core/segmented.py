@@ -21,6 +21,7 @@ reproduces the paper's Fig. 5 "negligible overhead" claim.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Callable, Sequence
 
 import jax
@@ -167,3 +168,81 @@ def seg_triad(a: SegmentedArray, b: SegmentedArray, c: SegmentedArray,
               d: SegmentedArray) -> SegmentedArray:
     """Segmented Schoenauer vector triad A = B + C * D (paper SS2.2)."""
     return seg_map(lambda bb, cc, dd: bb + cc * dd, a, b, c, d)
+
+
+# ---------------------------------------------------------------------------
+# Page tables: the 2-D generalization of the segmented container
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PageGeometry:
+    """Static geometry of a paged pool: the segmented container generalized
+    from "one segment per thread" to "one page table per sequence".
+
+    A ``SegmentedArray`` splits one logical array into aligned, phase-shifted
+    physical segments.  A paged pool inverts the mapping: many logical
+    sequences share one physical pool of fixed-size *pages*, and a per
+    -sequence page table maps logical position ``p`` to physical page
+    ``table[p // page_len]`` at offset ``p % page_len``.  The paper's two
+    layout rules survive intact:
+
+      * *alignment* -- ``page_len`` is a whole number of planner sublane
+        tiles (the controller-period analogue), so every page is a planned
+        VMEM block and no page straddles a tile boundary;
+      * *skew* -- :meth:`alloc_order` hands out physical pages round-robin
+        across ``banks`` interleave groups (``page_id % banks``), so the
+        consecutive logical pages of one sequence land on different banks --
+        the per-segment ``phase`` shift of §2.3, re-targeted at page
+        granularity.
+
+    Physical page 0 is reserved as the *null page*: empty page-table rows
+    point at it and masked writes are routed into it, so a scatter over a
+    partially occupied batch never touches live data.
+    """
+
+    page_len: int          # logical positions per page (sublane-tile multiple)
+    n_pages: int           # physical pages in the pool, including null page 0
+    banks: int = 1         # allocation-interleave width (controller analogue)
+
+    def __post_init__(self):
+        if self.page_len <= 0:
+            raise ValueError("page_len must be positive")
+        if self.n_pages < 2:
+            raise ValueError("n_pages must include the null page and at "
+                             "least one allocatable page")
+        if self.banks <= 0:
+            raise ValueError("banks must be positive")
+
+    @property
+    def live_pages(self) -> int:
+        """Allocatable pages (everything but the reserved null page)."""
+        return self.n_pages - 1
+
+    def pages_for(self, length: int) -> int:
+        """Pages needed to hold ``length`` logical positions."""
+        if length <= 0:
+            return 0
+        return -(-length // self.page_len)
+
+    def page_of(self, pos: int) -> int:
+        return pos // self.page_len
+
+    def offset_of(self, pos: int) -> int:
+        return pos % self.page_len
+
+    def alloc_order(self) -> list[int]:
+        """Bank-skewed allocation order over pages ``1..n_pages-1``.
+
+        Successive allocations -- and therefore the consecutive logical
+        pages of a growing sequence -- cycle through the ``banks``
+        interleave groups, the paper's skew applied to page placement."""
+        by_bank: list[list[int]] = [[] for _ in range(self.banks)]
+        for pid in range(1, self.n_pages):
+            by_bank[pid % self.banks].append(pid)
+        order: list[int] = []
+        queues = [list(b) for b in by_bank if b]
+        while any(queues):
+            for q in queues:
+                if q:
+                    order.append(q.pop(0))
+        return order

@@ -360,6 +360,96 @@ def decode_attention(
     return out, cache_k, cache_v
 
 
+# ---- paged KV cache (serving) ---------------------------------------------
+#
+# The serving scheduler stores KV in a shared physical pool of fixed-size
+# pages instead of one dense (slots, max_len) slab: each batch row owns a
+# page *table* mapping logical position p to physical page table[p // P] at
+# offset p % P (core.segmented.PageGeometry -- the 2-D generalization of the
+# paper's segmented container).  Page 0 is the reserved null page: empty
+# table rows point at it and masked writes land in it, so a scatter over a
+# partially occupied batch never touches live data.
+
+
+def paged_kv_pool_defs(cfg: ModelConfig, n_pages: int, page_len: int,
+                       n: int) -> dict:
+    """Stacked (n-layer) paged KV pool: pages are physical (page_len, KH, D)
+    tiles shared by all slots; there is no batch axis -- placement is the
+    page table's job.  Pages are stored position-major regardless of
+    ``cfg.kv_cache_layout`` (the dense-slab layout knob does not apply: page
+    geometry is the planner's choice, see serving.paged_cache)."""
+    shape = (n, n_pages, page_len, cfg.n_kv_heads, cfg.hd)
+    axes = ("layers", None, None, "kv_heads", None)
+    return {
+        "k": ParamDef(shape, axes, init="zeros", dtype=cfg.adtype),
+        "v": ParamDef(shape, axes, init="zeros", dtype=cfg.adtype),
+    }
+
+
+def _paged_put(pool: jax.Array, new: jax.Array, pages: jax.Array,
+               idx: jax.Array, act: jax.Array) -> jax.Array:
+    """Insert (B, 1, KH, D) at per-row logical position ``idx`` through the
+    page table.  ``act`` (B,) masks the write: inactive rows are routed to
+    the null page (physical page 0), so a frozen slot's pool state is
+    bit-identical to not having stepped at all."""
+    p = pool.shape[1]
+    b = new.shape[0]
+    idx = jnp.broadcast_to(jnp.asarray(idx, jnp.int32), (b,))
+    lp = jnp.clip(idx // p, 0, pages.shape[1] - 1)
+    phys = jnp.take_along_axis(pages, lp[:, None], axis=1)[:, 0]
+    live = act > 0
+    phys = jnp.where(live, phys, 0)
+    off = jnp.where(live, idx % p, 0)
+    return pool.at[phys, off].set(new[:, 0])
+
+
+def _paged_view(pool: jax.Array, pages: jax.Array) -> jax.Array:
+    """Gather (B, max_pages * page_len, KH, D): the dense bshd view of each
+    row's page table.  Unmapped table entries read the null page; their
+    positions sit beyond the row's written prefix and are masked by the
+    caller's ``<= idx`` validity test."""
+    g = pool[pages]                         # (B, MP, P, KH, D)
+    b, mp, p = g.shape[:3]
+    return g.reshape(b, mp * p, *g.shape[3:])
+
+
+def paged_decode_attention(
+    p: dict,
+    x: jax.Array,
+    pool_k: jax.Array,
+    pool_v: jax.Array,
+    pages: jax.Array,
+    idx: jax.Array,
+    act: jax.Array,
+    cfg: ModelConfig,
+    *,
+    use_rope: bool = True,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """One-token decode against the paged pool: same math as
+    ``decode_attention``, with the cache write scattered through the page
+    table and the KV view gathered from it.  Returns (out, new_pool_k,
+    new_pool_v)."""
+    b = x.shape[0]
+    idx = jnp.broadcast_to(jnp.asarray(idx, jnp.int32), (b,))
+    pos = idx[:, None]
+    q, k, v = _project_qkv(p, x, x, cfg)
+    if use_rope:
+        q = rope(q, pos, cfg.rope_theta)
+        k = rope(k, pos, cfg.rope_theta)
+    pool_k = _paged_put(pool_k, k, pages, idx, act)
+    pool_v = _paged_put(pool_v, v, pages, idx, act)
+    kv_k = _paged_view(pool_k, pages)
+    kv_v = _paged_view(pool_v, pages)
+    scores = _gqa_scores(q, kv_k, cfg)      # (B,KH,G,1,S)
+    s = kv_k.shape[1]
+    valid = (jnp.arange(s, dtype=jnp.int32)[None, :]
+             <= idx[:, None])[:, None, None, None, :]
+    scores = jnp.where(valid, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = _gqa_out(probs, kv_v, p, x.dtype)
+    return out, pool_k, pool_v
+
+
 # ---------------------------------------------------------------------------
 # MLP (SwiGLU / GeGLU)
 # ---------------------------------------------------------------------------

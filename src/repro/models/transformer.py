@@ -338,8 +338,41 @@ def cache_defs(cfg: ModelConfig, batch: int, max_len: int) -> Tree:
     return tree
 
 
+def paged_cache_defs(cfg: ModelConfig, batch: int, max_len: int,
+                     n_pages: int, page_len: int) -> Tree:
+    """Paged serving cache (serving.paged_cache): attention stages share a
+    physical page pool; per-slot state is the page table plus the O(1) SSM
+    states.  Extra leaves vs :func:`cache_defs`:
+
+      * ``pages`` -- (batch, max_pages) int32 page table, 0 = null page;
+      * ``act``   -- (batch,) int32 row-active mask consumed by the paged
+        cache write (inactive rows scatter into the null page), the lever
+        the chunked-prefill step uses to freeze rows mid-chunk.
+    """
+    max_pages = -(-max_len // page_len)
+    tree: Tree = {
+        "idx": ParamDef((batch,), ("batch",), init="zeros", dtype=jnp.int32),
+        "act": ParamDef((batch,), ("batch",), init="ones", dtype=jnp.int32),
+        "pages": ParamDef((batch, max_pages), ("batch", None), init="zeros",
+                          dtype=jnp.int32),
+    }
+    for i, (kind, count) in enumerate(cfg.stages()):
+        nm = stage_name(i, kind)
+        if kind in ("dense", "moe", "shared_attn"):
+            tree[nm] = blocks.paged_kv_pool_defs(cfg, n_pages, page_len, count)
+        elif kind == "mamba":
+            tree[nm] = mamba2.mamba_cache_defs(cfg, batch, count)
+        elif kind == "mlstm":
+            tree[nm] = xlstm.mlstm_cache_defs(cfg, batch, count)
+        elif kind == "slstm":
+            tree[nm] = xlstm.slstm_cache_defs(cfg, batch, count)
+    return tree
+
+
 def _decode_block(kind: str, p: Tree, cache: Tree, x: jax.Array, idx: jax.Array,
-                  cfg: ModelConfig, h0: jax.Array | None):
+                  cfg: ModelConfig, h0: jax.Array | None,
+                  pages: jax.Array | None = None,
+                  act: jax.Array | None = None):
     rs = jnp.asarray(cfg.residual_scale, x.dtype)
     if kind in ("dense", "moe", "shared_attn"):
         if kind == "shared_attn":
@@ -348,9 +381,14 @@ def _decode_block(kind: str, p: Tree, cache: Tree, x: jax.Array, idx: jax.Array,
         else:
             xin = x
         h = blocks.apply_norm(p["ln1"], xin, cfg)
-        h, ck, cv = blocks.decode_attention(
-            p["attn"], h, cache["k"], cache["v"], idx, cfg
-        )
+        if pages is not None:
+            h, ck, cv = blocks.paged_decode_attention(
+                p["attn"], h, cache["k"], cache["v"], pages, idx, act, cfg
+            )
+        else:
+            h, ck, cv = blocks.decode_attention(
+                p["attn"], h, cache["k"], cache["v"], idx, cfg
+            )
         x = x + rs * h
         h = blocks.apply_norm(p["ln2"], x, cfg)
         if kind == "moe":
@@ -376,24 +414,36 @@ def _decode_block(kind: str, p: Tree, cache: Tree, x: jax.Array, idx: jax.Array,
 
 def decode_step(params: Tree, cache: Tree, tokens: jax.Array, cfg: ModelConfig
                 ) -> tuple[jax.Array, Tree]:
-    """One-token decode. tokens: (B, 1). Returns (logits, new_cache)."""
+    """One-token decode. tokens: (B, 1). Returns (logits, new_cache).
+
+    A cache built by :func:`paged_cache_defs` (a ``pages`` leaf present)
+    routes attention stages through the page table: writes scatter into the
+    shared pool (``act`` masks frozen rows into the null page) and the KV
+    view is gathered per row.  SSM/mLSTM state stages are identical on both
+    paths."""
     idx = cache["idx"]
+    pages = cache.get("pages")
+    act = cache.get("act")
     x = embed_tokens(params, tokens, cfg)
     h0 = x
     new_cache: Tree = {"idx": idx + 1}
+    if pages is not None:
+        new_cache["pages"] = pages
+        new_cache["act"] = act
     for i, (kind, count) in enumerate(cfg.stages()):
         nm = stage_name(i, kind)
         if kind == "shared_attn":
             # single-layer stage: strip the stacked axis of its cache
             c1 = jax.tree.map(lambda a: a[0], cache[nm])
             x, nc = _decode_block(kind, params["shared_attn"], c1, x, idx,
-                                  cfg, h0)
+                                  cfg, h0, pages, act)
             new_cache[nm] = jax.tree.map(lambda a: a[None], nc)
         else:
             def body(carry, inp):
                 lp, lc = inp
                 h = carry
-                h, nc = _decode_block(kind, lp, lc, h, idx, cfg, None)
+                h, nc = _decode_block(kind, lp, lc, h, idx, cfg, None,
+                                      pages, act)
                 return h, nc
 
             if cfg.unroll:
@@ -445,6 +495,10 @@ class LM:
 
     def cache_defs(self, batch: int, max_len: int) -> Tree:
         return cache_defs(self.cfg, batch, max_len)
+
+    def paged_cache_defs(self, batch: int, max_len: int, n_pages: int,
+                         page_len: int) -> Tree:
+        return paged_cache_defs(self.cfg, batch, max_len, n_pages, page_len)
 
     def decode_step(self, params, cache, tokens):
         return decode_step(params, cache, tokens, self.cfg)

@@ -31,8 +31,11 @@ from repro.obs.events import (
     BatcherTickEvent,
     CheckpointEvent,
     Event,
+    PagePoolEvent,
     PlanEvent,
+    PreemptionEvent,
     ProfileDriftEvent,
+    RequestAbandonedEvent,
     SpmdFallbackEvent,
     SpmdOverrideShadowEvent,
     TrainStepEvent,
@@ -52,6 +55,7 @@ __all__ = [
     "Sink", "NullSink", "RingBufferSink", "JsonlSink", "LoggingSink",
     "Event", "PlanEvent", "SpmdFallbackEvent", "SpmdOverrideShadowEvent",
     "ValidationEvent", "TrainStepEvent", "CheckpointEvent",
-    "AdmissionEvent", "BatcherTickEvent", "ProfileDriftEvent",
+    "AdmissionEvent", "BatcherTickEvent", "PagePoolEvent",
+    "PreemptionEvent", "RequestAbandonedEvent", "ProfileDriftEvent",
     "EVENT_KINDS",
 ]

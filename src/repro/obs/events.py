@@ -19,6 +19,12 @@ and a wall-clock timestamp.  The taxonomy mirrors the repo's existing
   * ``CheckpointEvent``      -- a checkpoint save/restore.
   * ``AdmissionEvent``       -- the batcher admitted a request to a slot.
   * ``BatcherTickEvent``     -- one decode tick's occupancy/packing state.
+  * ``PagePoolEvent``        -- the paged KV cache's pool occupancy after
+                                a tick (paged batcher only).
+  * ``PreemptionEvent``      -- the batcher evicted a slot to reclaim its
+                                pages (the request is requeued for replay).
+  * ``RequestAbandonedEvent`` -- ``run()`` hit its tick budget with this
+                                request still queued or in flight.
   * ``ProfileDriftEvent``    -- a swept profile cell no longer reproduces
                                 its recorded geometry (planner drift).
 
@@ -44,6 +50,9 @@ __all__ = [
     "CheckpointEvent",
     "AdmissionEvent",
     "BatcherTickEvent",
+    "PagePoolEvent",
+    "PreemptionEvent",
+    "RequestAbandonedEvent",
     "ProfileDriftEvent",
     "EVENT_KINDS",
 ]
@@ -197,6 +206,61 @@ class BatcherTickEvent(Event):
 
 
 @dataclasses.dataclass(frozen=True)
+class PagePoolEvent(Event):
+    """Paged-KV pool occupancy after one tick (paged batcher only).
+
+    ``live_pages`` excludes the reserved null page; utilization is
+    ``used_pages / live_pages``.  A pool pinned at full is the
+    backpressure/preemption regime; a pool near empty means the page
+    budget (``n_pages``) is oversized for the offered load.
+    """
+
+    kind: ClassVar[str] = "page_pool"
+
+    tick: int
+    used_pages: int
+    free_pages: int
+    live_pages: int
+    page_len: int
+
+
+@dataclasses.dataclass(frozen=True)
+class PreemptionEvent(Event):
+    """The batcher evicted a slot's request to reclaim its pages.
+
+    ``reason`` is "decode_pressure" (a decoding slot needed a page) or
+    "prefill_pressure" (an older prefill displaced a newer one).  The
+    request is requeued at the head of the queue and replays from scratch
+    on re-admission (greedy decode makes the replay token-identical).
+    """
+
+    kind: ClassVar[str] = "preemption"
+
+    rid: int
+    slot: int
+    reason: str
+    pages_freed: int
+    queue_depth: int
+
+
+@dataclasses.dataclass(frozen=True)
+class RequestAbandonedEvent(Event):
+    """``run()`` exhausted ``max_ticks`` with this request unfinished.
+
+    ``stage`` is "queued", "prefill", or "decode"; ``fed``/``generated``
+    record how far it got.  Paired with :class:`~repro.serving.scheduler
+    .TruncatedRun` so truncation is never silent.
+    """
+
+    kind: ClassVar[str] = "request_abandoned"
+
+    rid: int
+    stage: str
+    fed: int
+    generated: int
+
+
+@dataclasses.dataclass(frozen=True)
 class ProfileDriftEvent(Event):
     """A swept profile cell no longer reproduces its recorded geometry."""
 
@@ -218,6 +282,9 @@ EVENT_KINDS: dict[str, type[Event]] = {
         CheckpointEvent,
         AdmissionEvent,
         BatcherTickEvent,
+        PagePoolEvent,
+        PreemptionEvent,
+        RequestAbandonedEvent,
         ProfileDriftEvent,
     )
 }

@@ -14,8 +14,10 @@ reports, per section:
     and any out-of-envelope records, for both HBM bytes and comm wire
     bytes;
   * trainer -- steps, loss trajectory, mean step wall time, checkpoints;
-  * batcher -- admissions, peak queue depth, and mean packing waste
-    (free + tile-pad slots as a fraction of the physical decode batch);
+  * batcher -- admissions, peak queue depth, mean packing waste (free +
+    tile-pad slots as a fraction of the physical decode batch), plus the
+    paged-KV signals: mean/peak page-pool utilization, preemptions (by
+    reason), and requests abandoned at a run's tick budget;
   * profile drift -- swept cells the planner no longer reproduces.
 
 Sections with no events still print (zeroed), so the summary shape is
@@ -72,7 +74,10 @@ def aggregate(records: list[dict]) -> dict:
              "sum_step_s": 0.0, "checkpoint_saves": 0,
              "checkpoint_restores": 0}
     batcher = {"admissions": 0, "max_queue_depth": 0, "ticks": 0,
-               "sum_waste_frac": 0.0}
+               "sum_waste_frac": 0.0, "page_ticks": 0,
+               "sum_page_util": 0.0, "peak_page_util": None,
+               "preemptions": 0, "preempt_reasons": {},
+               "abandoned": 0}
     drift = {"total": 0, "cells": []}
 
     for rec in records:
@@ -147,6 +152,21 @@ def aggregate(records: list[dict]) -> dict:
             batcher["sum_waste_frac"] += waste / padded
             batcher["max_queue_depth"] = max(
                 batcher["max_queue_depth"], int(rec.get("queue_depth", 0)))
+        elif kind == "page_pool":
+            batcher["page_ticks"] += 1
+            live = int(rec.get("live_pages", 0)) or 1
+            util = int(rec.get("used_pages", 0)) / live
+            batcher["sum_page_util"] += util
+            if (batcher["peak_page_util"] is None
+                    or util > batcher["peak_page_util"]):
+                batcher["peak_page_util"] = util
+        elif kind == "preemption":
+            batcher["preemptions"] += 1
+            reason = rec.get("reason", "?")
+            batcher["preempt_reasons"][reason] = (
+                batcher["preempt_reasons"].get(reason, 0) + 1)
+        elif kind == "request_abandoned":
+            batcher["abandoned"] += 1
         elif kind == "profile_drift":
             drift["total"] += 1
             cell = rec.get("cell", "?")
@@ -160,6 +180,9 @@ def aggregate(records: list[dict]) -> dict:
     batcher["mean_waste_frac"] = (
         batcher["sum_waste_frac"] / batcher["ticks"]
         if batcher["ticks"] else None)
+    batcher["mean_page_util"] = (
+        batcher["sum_page_util"] / batcher["page_ticks"]
+        if batcher["page_ticks"] else None)
     return {
         "events": len(records),
         "plan": plan,
@@ -225,6 +248,16 @@ def render(summary: dict) -> str:
         f"batcher: {ba['admissions']} admission(s), {ba['ticks']} tick(s), "
         f"peak queue {ba['max_queue_depth']}, mean packing waste "
         + (f"{waste:.1%}" if waste is not None else "-"))
+    util = ba["mean_page_util"]
+    reasons = "; ".join(f"{r}: {n}" for r, n in
+                        sorted(ba["preempt_reasons"].items()))
+    lines.append(
+        "  paged kv: "
+        + (f"mean pool util {util:.1%}, peak {ba['peak_page_util']:.1%}"
+           if util is not None else "no page-pool events")
+        + f", {ba['preemptions']} preemption(s)"
+        + (f" ({reasons})" if reasons else "")
+        + f", {ba['abandoned']} abandoned request(s)")
 
     dr = summary["profile_drift"]
     lines.append(f"profile drift: {dr['total']}"

@@ -105,6 +105,63 @@ def make_decode_step(model) -> Callable:
     return decode_step
 
 
+def make_chunk_step(model, batch_axes) -> Callable:
+    """Chunked serve step: advance each batch row by its own number of
+    tokens (0..C) in ONE jitted call -- the continuous batcher's chunked
+    -prefill tick (docs/SERVING.md).
+
+    ``chunk_step(params, cache, tokens, nvalid)`` scans C masked micro
+    decode steps: at micro-step c only rows with ``c < nvalid`` advance.
+    Frozen rows are restored leaf-by-leaf along their cache batch axis
+    (``batch_axes``: a cache-shaped pytree of ints, -1 for leaves with no
+    batch axis -- the shared paged pools, which instead self-mask by
+    routing inactive writes to the null page via the cache's ``act``
+    leaf).  Because batch rows are independent in the model, each row's
+    tokens are *bit-identical* to stepping it alone one token at a time --
+    chunking is purely a scheduling lever, never a numerics change.
+
+    Returns ``(next_token (B, 1), new_cache)`` where ``next_token[b]`` is
+    the greedy token after row b's last valid input (garbage for rows with
+    ``nvalid == 0``; the scheduler ignores them).
+    """
+
+    def _restore(new, old, ax, active):
+        if ax < 0:
+            return new
+        mask = active.reshape(
+            tuple(new.shape[ax] if d == ax else 1 for d in range(new.ndim)))
+        return jnp.where(mask, new, old)
+
+    def chunk_step(params: dict, cache: dict, tokens: jax.Array,
+                   nvalid: jax.Array):
+        c_total = tokens.shape[1]
+
+        def micro(carry, inp):
+            cur = carry
+            tok, c = inp
+            active = c < nvalid                                   # (B,)
+            if "act" in cur:
+                cur = dict(cur)
+                cur["act"] = active.astype(jnp.int32)
+            logits, nc = model.decode_step(params, cur, tok[:, None])
+            nc = jax.tree.map(
+                lambda n, o, ax: _restore(n, o, ax, active),
+                nc, cur, batch_axes)
+            nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+            return nc, nxt
+
+        xs = (tokens.T, jnp.arange(c_total, dtype=jnp.int32))
+        new_cache, toks = jax.lax.scan(micro, cache, xs)          # toks (C,B)
+        sel = jnp.clip(nvalid - 1, 0, c_total - 1)
+        next_tok = jnp.take_along_axis(toks.T, sel[:, None], axis=1)
+        if "act" in new_cache:
+            new_cache = dict(new_cache)
+            new_cache["act"] = jnp.ones_like(new_cache["act"])
+        return next_tok, new_cache
+
+    return chunk_step
+
+
 def init_train_state(model, opt_cfg: adamw.AdamWConfig, key) -> dict:
     params = model.init(key)
     return {"params": params, "opt": adamw.init_state(params, opt_cfg)}

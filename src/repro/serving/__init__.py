@@ -1,4 +1,18 @@
-"""Serving: continuous batching over the serve_step decode path."""
-from repro.serving.scheduler import ContinuousBatcher, Request
+"""Serving: continuous batching over the serve_step decode path.
 
-__all__ = ["ContinuousBatcher", "Request"]
+``ContinuousBatcher`` streams ragged requests through a fixed slot batch;
+``kv_cache="paged"`` swaps the dense KV slab for the planner-packed page
+pool (``serving.paged_cache``) with SLO-aware admission, chunked prefill,
+and decode-priority preemption.  See docs/SERVING.md.
+"""
+from repro.serving.paged_cache import (
+    DEFAULT_PAGE_VMEM,
+    PageManager,
+    plan_page_geometry,
+)
+from repro.serving.scheduler import ContinuousBatcher, Request, TruncatedRun
+
+__all__ = [
+    "ContinuousBatcher", "Request", "TruncatedRun",
+    "PageManager", "plan_page_geometry", "DEFAULT_PAGE_VMEM",
+]

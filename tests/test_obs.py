@@ -73,7 +73,8 @@ class TestEvents:
     def test_kind_registry_is_complete(self):
         kinds = {"plan", "spmd_fallback", "spmd_override_shadow",
                  "validation", "train_step", "checkpoint", "admission",
-                 "batcher_tick", "profile_drift"}
+                 "batcher_tick", "page_pool", "preemption",
+                 "request_abandoned", "profile_drift"}
         assert set(events.EVENT_KINDS) == kinds
         for kind, cls in events.EVENT_KINDS.items():
             assert cls.kind == kind

@@ -1,0 +1,232 @@
+"""Paged KV cache units + scheduler correctness regressions (fast).
+
+Covers the host-side machinery without compiling a real model: page
+geometry arithmetic and bank-skewed allocation, the PageManager pool,
+planner-derived page sizing, and the three scheduler bugfix regressions
+(shape-guessed slot resets, non-bool ``done()`` / empty prompts, and
+silent ``run()`` truncation).  Model-level paged-vs-dense parity lives in
+``tests/test_serving.py`` (slow)."""
+import types
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.core.segmented import PageGeometry
+from repro.models.params import ParamDef
+from repro.serving import (
+    ContinuousBatcher,
+    PageManager,
+    Request,
+    TruncatedRun,
+    plan_page_geometry,
+)
+
+
+# ---------------------------------------------------------------------------
+# geometry
+# ---------------------------------------------------------------------------
+class TestPageGeometry:
+    def test_arithmetic(self):
+        g = PageGeometry(page_len=8, n_pages=5)
+        assert g.live_pages == 4
+        assert [g.pages_for(n) for n in (0, 1, 8, 9, 16)] == [0, 1, 1, 2, 2]
+        assert g.page_of(13) == 1 and g.offset_of(13) == 5
+        assert g.pages_for(-3) == 0
+
+    def test_alloc_order_is_bank_skewed(self):
+        g = PageGeometry(page_len=8, n_pages=9, banks=4)
+        order = g.alloc_order()
+        assert sorted(order) == list(range(1, 9))        # null page excluded
+        # Consecutive allocations cycle through the interleave groups.
+        assert [p % 4 for p in order[:4]] == sorted({p % 4 for p in order[:4]})
+
+    def test_validation(self):
+        with pytest.raises(ValueError):
+            PageGeometry(page_len=0, n_pages=4)
+        with pytest.raises(ValueError):
+            PageGeometry(page_len=8, n_pages=1)     # null page only
+        with pytest.raises(ValueError):
+            PageGeometry(page_len=8, n_pages=4, banks=0)
+
+
+class TestPageManager:
+    def test_alloc_is_all_or_nothing(self):
+        pm = PageManager(PageGeometry(page_len=4, n_pages=4), n_slots=2)
+        assert pm.free_pages == 3
+        got = pm.alloc(0, upto_pos=7)                # 2 pages
+        assert len(got) == 2 and pm.free_pages == 1
+        assert [lp for lp, _ in got] == [0, 1]
+        # Slot 1 wants 2 pages but only 1 remains: nothing is taken.
+        assert pm.alloc(1, upto_pos=4) is None
+        assert pm.free_pages == 1 and pm.slot_pages(1) == ()
+        # Growing an already-covered slot allocates nothing.
+        assert pm.alloc(0, upto_pos=6) == []
+
+    def test_release_returns_everything(self):
+        pm = PageManager(PageGeometry(page_len=4, n_pages=6, banks=2),
+                         n_slots=2)
+        pm.alloc(0, upto_pos=11)
+        assert pm.used_pages == 3
+        freed = pm.release(0)
+        assert len(freed) == 3
+        assert pm.free_pages == 5 and pm.slot_pages(0) == ()
+
+    def test_needed_tracks_coverage(self):
+        pm = PageManager(PageGeometry(page_len=4, n_pages=8), n_slots=1)
+        assert pm.needed(0, upto_pos=0) == 1
+        pm.alloc(0, upto_pos=0)
+        assert pm.needed(0, upto_pos=3) == 0
+        assert pm.needed(0, upto_pos=4) == 1
+
+
+class TestPlanPageGeometry:
+    def _cfg(self):
+        return types.SimpleNamespace(n_kv_heads=2, hd=16,
+                                     adtype=jnp.float32)
+
+    def test_page_len_is_planner_tile(self):
+        geom, plan = plan_page_geometry(self._cfg(), max_len=64, slots=2)
+        assert geom.page_len == plan.block_rows
+        assert geom.page_len % plan.sublanes == 0
+        # Enough pages for `slots` full sequences plus the null page.
+        assert geom.n_pages == 1 + 2 * (-(-64 // geom.page_len))
+
+    def test_explicit_page_len_must_be_tile_aligned(self):
+        geom, plan = plan_page_geometry(self._cfg(), max_len=64,
+                                        page_len=2 * 8)
+        assert geom.page_len == 16
+        with pytest.raises(ValueError, match="sublane"):
+            plan_page_geometry(self._cfg(), max_len=64,
+                               page_len=plan.sublanes + 1)
+
+
+# ---------------------------------------------------------------------------
+# scheduler regressions (fake models: no compilation heft)
+# ---------------------------------------------------------------------------
+class _EchoModel:
+    """Echoes the fed token as the greedy output; empty cache tree."""
+
+    def __init__(self, vocab: int = 16):
+        self.vocab = vocab
+        self.cfg = types.SimpleNamespace(d_model=0, adtype=jnp.float32)
+
+    def cache_defs(self, slots, max_len):
+        return {}
+
+    def decode_step(self, params, cache, tokens):
+        logits = jax.nn.one_hot(tokens[:, 0], self.vocab)[:, None, :]
+        return logits, cache
+
+
+class _AxisModel(_EchoModel):
+    """Echo model whose cache leaf carries its batch axis LAST, after a
+    ``max_len``-sized axis -- the layout that broke the old shape-guessed
+    ``_reset_slot`` whenever ``max_len == padded_slots``."""
+
+    def cache_defs(self, slots, max_len):
+        return {
+            "idx": ParamDef((slots,), ("batch",), init="zeros",
+                            dtype=jnp.int32),
+            "state": ParamDef((2, max_len, slots),
+                              ("layers", "cache_seq", "batch"),
+                              init="zeros", dtype=jnp.float32),
+        }
+
+    def decode_step(self, params, cache, tokens):
+        logits = jax.nn.one_hot(tokens[:, 0], self.vocab)[:, None, :]
+        new = {"idx": cache["idx"] + 1, "state": cache["state"] + 1.0}
+        return logits, new
+
+
+class TestResetSlotRegression:
+    def test_reset_follows_declared_batch_axis(self):
+        # max_len == padded_slots: the old heuristic (match shape[1] ==
+        # padded_slots -> reset axis 1) would have cleared the cache_seq
+        # rows of EVERY slot instead of one slot's column.
+        b = ContinuousBatcher(_AxisModel(), {}, slots=4, max_len=4)
+        assert b.padded_slots == b.max_len
+        b.cache = {
+            "idx": jnp.full((4,), 7, jnp.int32),
+            "state": jnp.ones((2, 4, 4), jnp.float32),
+        }
+        out = b._reset_slot(b.cache, 1)
+        state = np.asarray(out["state"])
+        assert np.all(state[:, :, 1] == 0.0)            # the reset tenant
+        assert np.all(np.delete(state, 1, axis=2) == 1.0)  # untouched
+        idx = np.asarray(out["idx"])
+        assert idx[1] == 0 and np.all(np.delete(idx, 1) == 7)
+
+    def test_end_to_end_isolation_with_reuse(self):
+        # 3 requests through 2 of 4 slots: re-admission must not leak the
+        # previous tenant's state even with max_len == padded_slots.
+        b = ContinuousBatcher(_AxisModel(), {}, slots=4, max_len=4)
+        out = b.run([Request(rid=i, prompt=[i + 1], max_new_tokens=2)
+                     for i in range(6)])
+        for i in range(6):
+            assert out[i] == [i + 1, i + 1]      # echo: prompt token twice
+
+
+class TestRequestRegressions:
+    def test_done_returns_bool(self):
+        req = Request(rid=0, prompt=[1, 2], max_new_tokens=4)
+        # Old bug: `generated and (...)` returned [] (the empty list) when
+        # eos was configured and nothing was generated yet.
+        assert req.done(3) is False
+        assert req.done(None) is False
+        req.generated = [3]
+        assert req.done(3) is True
+        req.generated = [9] * 4
+        assert req.done(None) is True
+
+    def test_empty_prompt_rejected_at_submit(self):
+        b = ContinuousBatcher(_EchoModel(), {}, slots=1, max_len=8)
+        with pytest.raises(ValueError, match="empty prompt"):
+            b.submit([Request(rid=0, prompt=[], max_new_tokens=2)])
+        # The queue stays clean: a later run() cannot trip over it.
+        assert not b.busy
+
+    def test_run_rejects_unknown_truncation_mode(self):
+        b = ContinuousBatcher(_EchoModel(), {}, slots=1, max_len=8)
+        with pytest.raises(ValueError, match="on_truncation"):
+            b.run([], on_truncation="warn")
+
+
+class TestTruncationRegression:
+    def _reqs(self, n):
+        return [Request(rid=i, prompt=[1, 2, 3], max_new_tokens=4)
+                for i in range(n)]
+
+    def test_run_raises_with_partial_results(self):
+        b = ContinuousBatcher(_EchoModel(), {}, slots=1, max_len=16)
+        with pytest.raises(TruncatedRun) as ei:
+            b.run(self._reqs(3), max_ticks=8)
+        # Slot capacity 1: rid 0 finishes (6 ticks), rid 1 is in flight,
+        # rid 2 still queued -- all of that must be in the exception.
+        assert sorted(ei.value.completed) == [0]
+        assert sorted(r.rid for r in ei.value.abandoned) == [1, 2]
+
+    def test_truncation_emits_abandonment_events(self):
+        b = ContinuousBatcher(_EchoModel(), {}, slots=1, max_len=16)
+        ring = obs.RingBufferSink()
+        with obs.session(ring):
+            with pytest.raises(TruncatedRun):
+                b.run(self._reqs(3), max_ticks=8)
+        evs = ring.events("request_abandoned")
+        assert sorted(e.rid for e in evs) == [1, 2]
+        stages = {e.rid: e.stage for e in evs}
+        assert stages[2] == "queued" and stages[1] in ("prefill", "decode")
+
+    def test_return_mode_is_opt_in_and_checkable(self):
+        b = ContinuousBatcher(_EchoModel(), {}, slots=1, max_len=16)
+        out = b.run(self._reqs(3), max_ticks=8, on_truncation="return")
+        assert sorted(out) == [0]
+        assert b.busy                       # caller can see the leftovers
+
+    def test_complete_run_does_not_raise(self):
+        b = ContinuousBatcher(_EchoModel(), {}, slots=2, max_len=16)
+        out = b.run(self._reqs(2))
+        assert sorted(out) == [0, 1]
+        assert not b.busy
