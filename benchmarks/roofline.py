@@ -85,14 +85,18 @@ PLAN_CASES = [
 ]
 
 # Per-shard cells for the communicating SPMD families (vocab-parallel xent,
-# halo-exchange jacobi) under a nominal 2x4 data/model mesh: the *local*
-# plan carries predicted_comm_bytes (halo rows / lse psum payloads), the
-# number `repro.measure.validate --comm` checks against the collective
-# census.  Shapes are the PLAN_CASES globals divided by the mesh (vocab
-# 122752 = 4096-aligned so the Megatron split engages).
+# halo-exchange jacobi and LBM) under a nominal 2x4 data/model mesh: the
+# *local* plan carries predicted_comm_bytes (halo rows / slabs / lse psum
+# payloads), the number `repro.measure.validate --comm` checks against the
+# collective census -- and predicted_exposed_comm_bytes, the part the
+# interior-stripe compute window cannot hide (docs/OVERLAP.md), which
+# `validate --comm --exposed` checks structurally.  Shapes are the
+# PLAN_CASES globals divided by the mesh (vocab 122752 = 4096-aligned so
+# the Megatron split engages).
 SPMD_MESH = {"data": 2, "model": 4}
 SPMD_LOCAL_CASES = [
     ("jacobi", (2000, 4000), "float32"),
+    ("lbm.ivjk", (19, 50, 100, 100), "float32"),
     ("xent", (2048, 30688), "float32"),
 ]
 
@@ -131,7 +135,8 @@ def planner_rows(validation_path: str = "results/validation.json"
             f"waste={p.waste:.4f};sublanes={p.sublanes};"
             f"block={'x'.join(str(b) for b in p.block_shape)};"
             f"pred_bytes={p.predicted_hbm_bytes};"
-            f"pred_comm={p.predicted_comm_bytes}"
+            f"pred_comm={p.predicted_comm_bytes};"
+            f"pred_exposed_comm={p.predicted_exposed_comm_bytes}"
         )
         rec = measured.get(kernel)
         if rec is None:
@@ -153,6 +158,7 @@ def planner_rows(validation_path: str = "results/validation.json"
             f"block={'x'.join(str(b) for b in p.block_shape)};"
             f"pred_bytes={p.predicted_hbm_bytes};"
             f"pred_comm={p.predicted_comm_bytes};"
+            f"pred_exposed_comm={p.predicted_exposed_comm_bytes};"
             f"comm_frac={p.predicted_comm_bytes / max(p.predicted_hbm_bytes, 1):.2e}",
         ))
     return out

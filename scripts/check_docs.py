@@ -1,0 +1,314 @@
+"""Docs-check stage: every claim docs/*.md makes about the code must hold.
+
+The docs are a checked artifact, not prose that rots.  Three classes of
+reference are extracted from every markdown page under ``docs/`` and
+verified against the tree:
+
+  1. **Dotted ``repro.*`` references** (anywhere in the page, prose or
+     code).  Each must resolve -- the longest importable module prefix is
+     imported and the remaining components walked with ``getattr`` -- or
+     match a quoted document-format tag in the source (``"repro.bench"``,
+     ``"repro.plan_profile"``, ...: strings the code emits into JSON
+     documents, which the docs legitimately name without them being
+     importable modules).
+
+  2. **Fenced ``python`` snippets.**  Each must parse
+     (``compile(..., "exec")``), and every ``import repro...`` /
+     ``from repro... import name`` statement inside must resolve the same
+     way as a dotted reference -- an example that imports a function we
+     deleted is a stale doc.
+
+  3. **Fenced ``sh`` snippets.**  Each ``python -m repro.<mod>`` (or
+     ``python scripts/x.py`` / ``python benchmarks/x.py``) invocation is
+     located; the module/script must exist, and every ``--flag`` passed
+     must appear in its argparse surface (collected by walking the file's
+     AST for ``add_argument`` calls -- no main() is executed).
+
+Run:  PYTHONPATH=src python scripts/check_docs.py
+Exit: non-zero with one ``page:line: message`` finding per stale
+reference; zero with a per-page summary when the docs are clean.
+"""
+from __future__ import annotations
+
+import ast
+import importlib
+import importlib.util
+import re
+import shlex
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+DOCS = REPO / "docs"
+
+# Dotted repro.* reference in prose or code.  Stops at anything that is
+# not a dotted identifier, so "repro.plan_profile/v1" matches only the
+# tag and a sentence-ending "repro.api." drops the trailing dot.
+REF_RE = re.compile(r"\brepro(?:\.[A-Za-z_][A-Za-z0-9_]*)+")
+
+SHELL_LANGS = {"sh", "shell", "bash", "console"}
+
+
+def _format_tags() -> set[str]:
+    """Quoted ``"repro.*"`` string literals in the source tree: the
+    document-format tags (``"repro.validation"``, ``"repro.bench"``, ...)
+    that docs may name without them being importable modules.  Collected
+    from the code so a deleted tag makes its doc reference stale."""
+    tags: set[str] = set()
+    lit = re.compile(r"[\"'](repro(?:\.[A-Za-z_][A-Za-z0-9_]*)+)[\"']")
+    for root in (REPO / "src" / "repro", REPO / "benchmarks", REPO / "scripts"):
+        for py in root.rglob("*.py"):
+            tags.update(lit.findall(py.read_text()))
+    return tags
+
+
+def _resolves(ref: str) -> bool:
+    """True when the dotted path imports: longest importable module
+    prefix, then getattr for the remaining components."""
+    parts = ref.split(".")
+    for i in range(len(parts), 0, -1):
+        try:
+            obj = importlib.import_module(".".join(parts[:i]))
+        except ImportError:
+            continue
+        for attr in parts[i:]:
+            if not hasattr(obj, attr):
+                return False
+            obj = getattr(obj, attr)
+        return True
+    return False
+
+
+def _argparse_flags(files: list[Path]) -> set[str]:
+    """Every string flag handed to an ``add_argument`` call in the given
+    files, found by AST walk (nothing is executed)."""
+    flags: set[str] = set()
+    for path in files:
+        try:
+            tree = ast.parse(path.read_text())
+        except SyntaxError:
+            continue
+        for node in ast.walk(tree):
+            if (
+                isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)
+                and node.func.attr == "add_argument"
+            ):
+                for arg in node.args:
+                    if (
+                        isinstance(arg, ast.Constant)
+                        and isinstance(arg.value, str)
+                        and arg.value.startswith("-")
+                    ):
+                        flags.add(arg.value)
+    return flags
+
+
+def _module_files(mod: str) -> list[Path] | None:
+    """Source files defining a ``python -m <mod>`` CLI: the module itself,
+    plus ``__main__.py`` when the module is a package."""
+    try:
+        spec = importlib.util.find_spec(mod)
+    except (ImportError, ValueError):
+        return None
+    if spec is None or spec.origin is None:
+        return None
+    origin = Path(spec.origin)
+    files = [origin]
+    if origin.name == "__init__.py":
+        main = origin.with_name("__main__.py")
+        if main.exists():
+            files.append(main)
+    return files
+
+
+class Checker:
+    def __init__(self) -> None:
+        self.findings: list[str] = []
+        self.n_refs = 0
+        self.n_snippets = 0
+        self.n_clis = 0
+        self._tags = _format_tags()
+        self._ref_cache: dict[str, bool] = {}
+        self._flag_cache: dict[str, set[str] | None] = {}
+
+    def fail(self, page: Path, line: int, msg: str) -> None:
+        self.findings.append(f"{page.relative_to(REPO)}:{line}: {msg}")
+
+    # -- dotted references -------------------------------------------------
+
+    def _ref_ok(self, ref: str) -> bool:
+        if ref not in self._ref_cache:
+            self._ref_cache[ref] = ref in self._tags or _resolves(ref)
+        return self._ref_cache[ref]
+
+    def check_refs(self, page: Path, text: str) -> None:
+        for lineno, line in enumerate(text.splitlines(), start=1):
+            for ref in REF_RE.findall(line):
+                self.n_refs += 1
+                if not self._ref_ok(ref):
+                    self.fail(
+                        page, lineno,
+                        f"`{ref}` neither imports nor matches a "
+                        f"document-format tag in the source",
+                    )
+
+    # -- fenced python snippets --------------------------------------------
+
+    def check_python(self, page: Path, start: int, body: str) -> None:
+        self.n_snippets += 1
+        try:
+            tree = ast.parse(body)
+        except SyntaxError as e:
+            self.fail(
+                page, start + (e.lineno or 1),
+                f"python snippet does not parse: {e.msg}",
+            )
+            return
+        for node in ast.walk(tree):
+            names: list[str] = []
+            if isinstance(node, ast.Import):
+                names = [a.name for a in node.names]
+            elif isinstance(node, ast.ImportFrom) and node.module:
+                names = [f"{node.module}.{a.name}" for a in node.names]
+            for name in names:
+                if name.split(".")[0] != "repro":
+                    continue
+                if not self._ref_ok(name):
+                    self.fail(
+                        page, start + node.lineno,
+                        f"snippet imports `{name}`, which does not resolve",
+                    )
+
+    # -- fenced shell snippets ---------------------------------------------
+
+    def _cli_flags(self, target: str) -> set[str] | None:
+        """Argparse flag surface for a CLI target (dotted module or repo
+        path), or None when the target itself is missing."""
+        if target not in self._flag_cache:
+            if target.endswith(".py"):
+                path = REPO / target
+                files = [path] if path.exists() else None
+            else:
+                files = _module_files(target)
+            self._flag_cache[target] = (
+                None if files is None else _argparse_flags(files)
+            )
+        return self._flag_cache[target]
+
+    def check_shell(self, page: Path, start: int, body: str) -> None:
+        # Join backslash continuations so one invocation is one line.
+        joined: list[tuple[int, str]] = []
+        acc, acc_line = "", 0
+        for off, raw in enumerate(body.splitlines(), start=1):
+            if not acc:
+                acc_line = off
+            if raw.rstrip().endswith("\\"):
+                acc += raw.rstrip()[:-1] + " "
+                continue
+            joined.append((acc_line, acc + raw))
+            acc = ""
+        if acc:
+            joined.append((acc_line, acc))
+        for off, line in joined:
+            self._check_invocation(page, start + off, line)
+
+    def _check_invocation(self, page: Path, lineno: int, line: str) -> None:
+        try:
+            tokens = shlex.split(line, comments=True)
+        except ValueError:
+            tokens = line.split()
+        # Usage-line brackets: `[--json]` names a real flag.
+        tokens = [t.strip("[]") for t in tokens if t.strip("[]")]
+        for i, tok in enumerate(tokens):
+            if tok not in ("python", "python3"):
+                continue
+            rest = tokens[i + 1:]
+            if rest[:1] == ["-m"]:
+                target = rest[1] if len(rest) > 1 else ""
+                rest = rest[2:]
+                if target.split(".")[0] != "repro":
+                    return  # pytest, pip, ... -- not ours to check
+                if not self._ref_ok(target):
+                    self.fail(page, lineno, f"`python -m {target}`: module "
+                                            f"does not import")
+                    return
+            elif rest and rest[0].endswith(".py"):
+                target = rest[0]
+                rest = rest[1:]
+                if not (REPO / target).exists():
+                    self.fail(page, lineno,
+                              f"`python {target}`: no such script")
+                    return
+            else:
+                return
+            self.n_clis += 1
+            flags = self._cli_flags(target)
+            if flags is None:
+                self.fail(page, lineno, f"cannot locate source for {target}")
+                return
+            for tok in rest:
+                if not tok.startswith("--"):
+                    continue
+                flag = tok.split("=", 1)[0]
+                if flag not in flags:
+                    self.fail(
+                        page, lineno,
+                        f"{target} has no `{flag}` flag in its argparse "
+                        f"surface (stale CLI reference)",
+                    )
+            return
+
+    # -- page walk ---------------------------------------------------------
+
+    def check_page(self, page: Path) -> None:
+        text = page.read_text()
+        self.check_refs(page, text)
+        lang, start, buf = None, 0, []
+        for lineno, line in enumerate(text.splitlines(), start=1):
+            stripped = line.strip()
+            if stripped.startswith("```"):
+                if lang is None:
+                    lang, start, buf = stripped[3:].strip() or "text", lineno, []
+                else:
+                    body = "\n".join(buf)
+                    if lang == "python":
+                        self.check_python(page, start, body)
+                    elif lang in SHELL_LANGS:
+                        self.check_shell(page, start, body)
+                    lang = None
+                continue
+            if lang is not None:
+                buf.append(line)
+        if lang is not None:
+            self.fail(page, start, f"unterminated ``` fence ({lang})")
+
+
+def main() -> int:
+    pages = sorted(DOCS.glob("*.md"))
+    if not pages:
+        print(f"check_docs: no pages under {DOCS}", file=sys.stderr)
+        return 1
+    checker = Checker()
+    for page in pages:
+        checker.check_page(page)
+    if checker.findings:
+        for finding in checker.findings:
+            print(finding, file=sys.stderr)
+        print(
+            f"check_docs: {len(checker.findings)} stale reference(s) across "
+            f"{len(pages)} page(s)",
+            file=sys.stderr,
+        )
+        return 1
+    print(
+        f"check_docs: {len(pages)} pages ok "
+        f"({checker.n_refs} repro.* references, "
+        f"{checker.n_snippets} python snippets, "
+        f"{checker.n_clis} CLI invocations checked)"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -36,13 +36,17 @@ if command -v ruff >/dev/null 2>&1; then
 else
   echo "tier1: ruff not installed, skipping lint (CI runs it)"
 fi
-# Stage 5: serving load-generator smoke -- a tiny offered-load point on
+# Stage 5: docs check -- every repro.* reference, CLI flag, and fenced
+# python snippet in docs/*.md verified against the tree (the docs are a
+# checked artifact; scripts/check_docs.py, CI job docs-check).
+python scripts/check_docs.py
+# Stage 6: serving load-generator smoke -- a tiny offered-load point on
 # the paged batcher (docs/SERVING.md), end to end through the CLI.  Keeps
 # the benchmark runnable and the paged/chunked scheduler importable even
 # when the slow serving matrix is deselected below.
 python benchmarks/serving_load.py --loads 0.3 --ticks 6 --slots 2 \
   --max-len 16 >/dev/null
 echo "tier1: serving load-generator smoke ok"
-# Stage 6: fast test matrix (full sweeps carry the `sweep` marker and run
+# Stage 7: fast test matrix (full sweeps carry the `sweep` marker and run
 # out-of-band: pytest -m sweep).
 exec python -m pytest -q -m "not slow and not sweep" "$@"

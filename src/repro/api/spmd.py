@@ -38,17 +38,24 @@ mapped to):
     ``pmax`` of the per-shard max, ``psum`` of the rescaled sum-exp and of
     the locally-gathered target logit -- three token-length fp32 vectors on
     the wire instead of a replicated (T, V) logits array;
-  * jacobi shards its grid rows and ``ppermute``s one-row halos (up and
-    down) before launching the same Pallas stencil on the locally planned
-    block shape.
+  * jacobi shards its grid rows and issues its one-row halo ``ppermute``s
+    *before* sweeping the interior stripe, so the wire time hides behind
+    the interior Pallas sweep (docs/OVERLAP.md);
+  * LBM shards its X axis the same way, with per-direction halo depth
+    (only the 2x5 D3Q19 directions with c_x != 0 cross a cut).
 
-The planner prices this traffic (``KernelPlan.predicted_comm_bytes``) so
-``repro.measure.validate --comm`` can check the lowered program's
-collective census against the model.  A declared sharding that cannot
-apply (vocab % mesh != 0) falls back to replication with a logged reason
+The planner prices this traffic (``KernelPlan.predicted_comm_bytes``,
+and the part the interior compute window cannot hide as
+``predicted_exposed_comm_bytes``) so ``repro.measure.validate --comm``
+can check the lowered program's collective census against the model and
+``--exposed`` can check the program *structures* the collectives as
+overlappable (``overlap_report`` below: a collective with some Pallas
+compute independent of it in both dataflow directions can run
+concurrently with that compute).  A declared sharding that cannot apply
+(vocab % mesh != 0) falls back to replication with a logged reason
 (``rules.spec_report``).  Kernels with neither a safe split nor a
-``spmd_body`` (LBM's streaming shifts) stay ``replicated()``: every device
-computes the full array.
+``spmd_body`` stay ``replicated()``: every device computes the full
+array.
 
 The path never nests: inside an existing shard_map/pmap body (pipeline
 stages) ``spmd_mesh`` returns None and ``launch`` stays single-device.
@@ -74,7 +81,8 @@ from repro.parallel.shardmap_compat import NO_CHECK, inside_shard_map, shard_map
 
 __all__ = ["Partitioning", "SCALAR", "replicated", "partitioning_for",
            "spmd_mesh", "spmd_launch", "ShardContext", "shard_specs",
-           "consulted_operand_dims"]
+           "consulted_operand_dims", "overlap_report", "OverlapReport",
+           "CollectiveSite"]
 
 _log = logging.getLogger(__name__)
 
@@ -413,3 +421,230 @@ def spmd_launch(entry, mesh, arrays, scalars):
     fn = shard_map(_shard_body, mesh=mesh, in_specs=in_specs,
                    out_specs=out_spec, **NO_CHECK)
     return fn(*arrays)
+
+
+# ---------------------------------------------------------------------------
+# Overlap structure analysis (validate --comm --exposed).
+#
+# Whether a collective's wire time *can* hide behind compute is a property
+# of the program's dataflow, not of the runtime: a collective that no
+# Pallas call depends on (and that depends on no Pallas call) is free to
+# run concurrently with that call -- XLA's async pairs (the
+# collective-permute-start/done ``lowering.collective_census`` parses in
+# HLO) are exactly the latitude the scheduler takes when the dependence
+# graph allows it.  The jaxpr is the right level to check this: dataflow
+# is explicit, and the shard-body structure the kernels author (halo
+# ppermute issued before the interior sweep, boundary stitch after) is
+# still visible rather than fused away.
+
+_COLLECTIVE_PRIMS = frozenset({
+    "ppermute", "pbroadcast", "psum", "psum_invariant", "pmax", "pmin",
+    "all_gather", "all_to_all", "reduce_scatter",
+})
+_COMPUTE_PRIMS = frozenset({"pallas_call"})
+
+
+@dataclasses.dataclass(frozen=True)
+class CollectiveSite:
+    """One collective equation in the flattened program.
+
+    axes:
+        mesh axis names the collective communicates over (its group size
+        is the product of their mesh sizes).
+    result_bytes:
+        per-device result size -- the same number the HLO census reads off
+        the lowered op, here from the jaxpr output avals (local shapes,
+        because the eqn sits inside the shard_map body).
+    overlappable:
+        True iff some Pallas call is independent of this collective in
+        both dataflow directions, i.e. the schedule may run them
+        concurrently and the wire time can hide behind that compute.
+    """
+
+    primitive: str
+    axes: tuple[str, ...]
+    result_bytes: int
+    overlappable: bool
+
+
+@dataclasses.dataclass(frozen=True)
+class OverlapReport:
+    collectives: tuple[CollectiveSite, ...]
+    n_pallas_calls: int
+
+    @property
+    def n_overlappable(self) -> int:
+        return sum(1 for c in self.collectives if c.overlappable)
+
+    @property
+    def all_overlappable(self) -> bool:
+        """Every collective can hide (vacuously true with none)."""
+        return all(c.overlappable for c in self.collectives)
+
+
+def _sub_jaxprs(params):
+    """Every Jaxpr nested in an eqn's params (unwrapping ClosedJaxpr),
+    including tuples of them (cond branches)."""
+    subs = []
+    for v in params.values():
+        for item in (v if isinstance(v, (tuple, list)) else (v,)):
+            inner = getattr(item, "jaxpr", item)
+            if hasattr(inner, "eqns") and hasattr(inner, "invars"):
+                subs.append(inner)
+    return subs
+
+
+def _flatten_rows(jaxpr, var_ids, rows, counter):
+    """Inline sub-jaxprs into flat ``(prim, in_ids, out_ids, avals,
+    params)`` rows.
+
+    ``var_ids`` maps jaxpr Vars to dataflow node ids; inlining binds an
+    inner jaxpr's invars/outvars to the enclosing eqn's, so dependence
+    chains survive the pjit/shard_map nesting ``launch`` produces.  When
+    the operand lists don't align one-to-one (while, mismatched-arity
+    custom calls) the eqn is bridged through a junction node that makes
+    everything inside depend on everything in -- conservative: it can only
+    under-report overlappability, never invent it.
+    """
+
+    def fresh():
+        counter[0] += 1
+        return counter[0]
+
+    def vid(v, make=False):
+        if isinstance(v, jax.core.Literal):
+            return None
+        if v not in var_ids:
+            if not make:
+                return None
+            var_ids[v] = fresh()
+        return var_ids[v]
+
+    for eqn in jaxpr.eqns:
+        in_ids = [i for v in eqn.invars if (i := vid(v)) is not None]
+        # A pallas_call's params carry the *kernel* jaxpr -- that is the
+        # compute unit itself, not program nesting to inline through.
+        subs = ([] if eqn.primitive.name in _COMPUTE_PRIMS
+                else _sub_jaxprs(eqn.params))
+        if not subs:
+            out_ids = [vid(v, make=True) for v in eqn.outvars]
+            rows.append((eqn.primitive.name, in_ids, out_ids,
+                         tuple(v.aval for v in eqn.outvars), eqn.params))
+            continue
+        aligned = all(
+            len(s.invars) <= len(eqn.invars)
+            and len(s.outvars) == len(eqn.outvars)
+            for s in subs
+        )
+        if aligned:
+            # pjit/shard_map/custom_* (1:1), cond (branches take the
+            # operands after the predicate): tail-align invars, merge each
+            # branch's outvars into the eqn's.
+            branch_outs = []
+            for s in subs:
+                for iv, ov in zip(s.invars, eqn.invars[-len(s.invars):]):
+                    oid = vid(ov)
+                    if oid is not None:
+                        var_ids[iv] = oid
+                for cv in s.constvars:
+                    var_ids.setdefault(cv, fresh())
+                _flatten_rows(s, var_ids, rows, counter)
+                branch_outs.append([vid(v, make=True) for v in s.outvars])
+            for k, ov in enumerate(eqn.outvars):
+                srcs = [bo[k] for bo in branch_outs]
+                if len(subs) == 1:
+                    var_ids[ov] = srcs[0]
+                else:
+                    rows.append((f"{eqn.primitive.name}:merge",
+                                 srcs + in_ids, [vid(ov, make=True)],
+                                 (ov.aval,), {}))
+        else:
+            # No positional alignment: junction in, junction out.
+            hub = fresh()
+            rows.append((f"{eqn.primitive.name}:in", in_ids, [hub], (), {}))
+            inner_outs = []
+            for s in subs:
+                for iv in list(s.invars) + list(s.constvars):
+                    var_ids[iv] = hub
+                _flatten_rows(s, var_ids, rows, counter)
+                inner_outs.extend(vid(v, make=True) for v in s.outvars)
+            rows.append((f"{eqn.primitive.name}:out", inner_outs + [hub],
+                         [vid(v, make=True) for v in eqn.outvars],
+                         tuple(v.aval for v in eqn.outvars), {}))
+
+
+def _aval_bytes(avals) -> int:
+    total = 0
+    for a in avals:
+        size = getattr(a, "size", None)
+        dt = getattr(a, "dtype", None)
+        if size is not None and dt is not None:
+            total += int(size) * dt.itemsize
+    return total
+
+
+def _site_axes(params) -> tuple[str, ...]:
+    for key in ("axes", "axis_name"):
+        v = params.get(key)
+        if v is None:
+            continue
+        return tuple(v) if isinstance(v, (tuple, list)) else (str(v),)
+    return ()
+
+
+def overlap_report(fn, *args, **kwargs) -> OverlapReport:
+    """Classify every collective in ``fn(*args, **kwargs)`` as
+    overlappable or blocking.
+
+    Traces ``fn`` to a jaxpr (or takes a ready-made ClosedJaxpr as
+    ``fn``), inlines the pjit/shard_map nesting, and marks a collective
+    overlappable iff some ``pallas_call`` is neither upstream nor
+    downstream of it.  The overlapped jacobi/LBM shard bodies pass (halo
+    ppermute independent of the interior sweep); the PR-5
+    exchange-then-compute shape fails (every Pallas call reads the
+    arrived halo).  ``validate --comm --exposed`` prices the blocking
+    sites as fully exposed wire bytes.
+    """
+    if hasattr(fn, "jaxpr") and hasattr(fn, "consts"):
+        closed = fn
+    else:
+        closed = jax.make_jaxpr(lambda *a: fn(*a, **kwargs))(*args)
+    var_ids: dict = {}
+    rows: list = []
+    counter = [0]
+    jx = closed.jaxpr
+    for v in list(jx.invars) + list(jx.constvars):
+        counter[0] += 1
+        var_ids[v] = counter[0]
+    _flatten_rows(jx, var_ids, rows, counter)
+
+    # Ancestor bitsets in one topological pass (jaxpr eqns are ordered).
+    n = len(rows)
+    anc = [0] * n
+    producer: dict[int, int] = {}
+    for i, (_, in_ids, out_ids, _avals, _params) in enumerate(rows):
+        a = 0
+        for v in in_ids:
+            p = producer.get(v)
+            if p is not None:
+                a |= anc[p] | (1 << p)
+        anc[i] = a
+        for v in out_ids:
+            producer[v] = i
+
+    pallas = [i for i, r in enumerate(rows) if r[0] in _COMPUTE_PRIMS]
+    sites = []
+    for i, (name, _in, _out, avals, params) in enumerate(rows):
+        if name not in _COLLECTIVE_PRIMS:
+            continue
+        free = any(
+            not (anc[i] >> p) & 1 and not (anc[p] >> i) & 1 for p in pallas
+        )
+        sites.append(CollectiveSite(
+            primitive=name,
+            axes=_site_axes(params),
+            result_bytes=_aval_bytes(avals),
+            overlappable=free,
+        ))
+    return OverlapReport(collectives=tuple(sites),
+                         n_pallas_calls=len(pallas))

@@ -168,10 +168,53 @@ def _comm_xent(plan: "KernelPlan", sizes: Mapping[str, int]) -> int:
     return total
 
 
+# Of D3Q19's 19 directions, 5 have c_x = +1 and 5 have c_x = -1 (one face
+# + four edges each way); the other 9 never cross an X cut.  Hardcoded so
+# core never imports the kernels package (same rule as _LBM_Q above).
+_LBM_X_DIRS = 5
+
+
+def _comm_lbm(plan: "KernelPlan", sizes: Mapping[str, int]) -> int:
+    # X-sharded lattice (Q, X, Y, Z): per streaming step each shard
+    # ppermutes one (5, 1, Y, Z) slab of +x-moving populations down-ring
+    # and one slab of -x-moving populations up-ring -- only the 10
+    # directions with nonzero c_x cross the cut, at depth |c_x| = 1.
+    d = sizes.get("data", 1)
+    if d <= 1:
+        return 0
+    y, z = (int(s) for s in plan.logical_shape[2:4])
+    return 2 * _LBM_X_DIRS * y * z * plan.elem_bytes
+
+
 COMM_MODEL: dict[str, Callable[["KernelPlan", Mapping[str, int]], int]] = {
     "jacobi": _comm_jacobi,
     "xent": _comm_xent,
+    "lbm.soa": _comm_lbm,
+    "lbm.ivjk": _comm_lbm,
 }
+
+# ---------------------------------------------------------------------------
+# Exposed communication (the overlap term)
+# ---------------------------------------------------------------------------
+# Halo-exchange geometry per family: (sharded logical dim, halo depth).
+# These are the families whose SPMD bodies are *overlapped* -- the halo
+# ppermute is issued before interior-stripe compute, so the wire time can
+# hide behind the interior memory stream.  The hideable fraction is the
+# classic overlap bound: while the interior stripe streams
+# ``MAJOR_STREAMS x interior_elems x elem_bytes`` through HBM, the link can
+# move that window scaled by ICI_BW / HBM_BW; anything beyond that stays
+# exposed on the critical path.  Families with a COMM_MODEL entry but no
+# halo spec (xent's lse combine) block on their collective -- the compute
+# that could hide it depends on the collective's result -- so their comm is
+# fully exposed.  Bandwidths are the v5e roofline constants (also in
+# benchmarks/roofline.py and launch/lowering.py, which core cannot import).
+HALO_MODEL: dict[str, tuple[int, int]] = {
+    "jacobi": (0, 1),     # one row up + one row down over the data axis
+    "lbm.soa": (1, 1),    # X planes; 2 x 5 direction-slabs of depth 1
+    "lbm.ivjk": (1, 1),
+}
+_HBM_BW = 819e9
+_ICI_BW = 50e9
 
 
 def register_family(
@@ -366,6 +409,35 @@ class KernelPlan:
             return 0
         return fn(self, dict(self.mesh))
 
+    @property
+    def predicted_exposed_comm_bytes(self) -> int:
+        """The part of ``predicted_comm_bytes`` left on the critical path
+        after overlap: total wire bytes minus what the interior-stripe
+        compute window can hide (``HALO_MODEL``).  The overlapped shard
+        bodies issue the halo ppermute before interior compute, so the link
+        moves halo bytes while ``MAJOR_STREAMS x interior_elems`` stream
+        through HBM; the hideable window is that HBM time converted to wire
+        bytes at ICI_BW / HBM_BW.  Families without a halo spec (xent's
+        blocking lse combine) expose everything.  This is the number
+        ``repro.measure.validate --comm --exposed`` checks against the
+        overlap structure of the lowered program."""
+        total = self.predicted_comm_bytes
+        if total == 0:
+            return 0
+        spec = HALO_MODEL.get(self.kernel)
+        if spec is None:
+            return total
+        dim, depth = spec
+        interior = [int(s) for s in self.logical_shape]
+        interior[dim] = max(interior[dim] - 2 * depth, 0)
+        elems = 1
+        for s in interior:
+            elems *= s
+        major = MAJOR_STREAMS.get(self.kernel, self.signature.n_streams)
+        window = major * elems * self.elem_bytes
+        hidden = min(total, int(window * _ICI_BW / _HBM_BW))
+        return total - hidden
+
     def explain(self) -> str:
         """Human-readable report: predicted balance, waste, block geometry."""
         sig = self.signature
@@ -385,7 +457,8 @@ class KernelPlan:
             f" ({self.padded_elems - self.logical_elems} pad elems)\n"
             f"  predicted traffic {self.predicted_hbm_bytes}B"
             f" (logical {self.predicted_logical_bytes}B,"
-            f" comm {self.predicted_comm_bytes}B)"
+            f" comm {self.predicted_comm_bytes}B,"
+            f" exposed {self.predicted_exposed_comm_bytes}B)"
             + ("" if not self.local
                else f"\n  local shard plan for mesh "
                     f"{dict(self.mesh) or '(none)'}")

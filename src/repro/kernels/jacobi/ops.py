@@ -6,11 +6,18 @@ a sublane multiple, block rows sized to the VMEM budget; the three shifted
 views give each block its halo without overlap reads.
 
 Under an SPMD mesh the grid *rows* shard over the data axis and each shard
-exchanges one-row halos with its neighbors via ``ppermute`` before
-launching the same Pallas stencil on its locally planned block shape --
-the paper's domain-decomposition move (each thread's working set pinned to
-its own controller, only the boundary rows travel).  Two (1, cols) rows
-per sweep cross the wire instead of every device sweeping the full grid.
+exchanges one-row halos with its neighbors via ``ppermute`` -- the paper's
+domain-decomposition move (each thread's working set pinned to its own
+controller, only the boundary rows travel).  Two (1, cols) rows per sweep
+cross the wire instead of every device sweeping the full grid.
+
+The shard body is *overlapped* (docs/OVERLAP.md): the halo ppermutes are
+issued first and the interior stripe (which reads only locally-resident
+rows) is swept while they are in flight; only the two boundary rows touch
+the arriving halo slabs.  ``KernelPlan.predicted_exposed_comm_bytes``
+prices what is left on the critical path and
+``repro.measure.validate --comm --exposed`` checks the lowered program
+keeps the collective independent of the interior sweep.
 """
 from __future__ import annotations
 
@@ -20,6 +27,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.api import dispatch
+from repro.api import spmd as spmd_lib
 from repro.api.registry import register_kernel
 from repro.api.spmd import Partitioning
 from repro.core.autotune import StreamSignature
@@ -46,15 +54,54 @@ def _step(src, *, plan):
     return src.at[1:-1, :].set(out[:rows, :m])
 
 
-def _spmd_jacobi(ctx, src):
-    """shard_map body: halo-exchange Jacobi on a row-block shard.
+def _row_stencil(sa, sb, sl, n_cols: int):
+    """One stencil row in plain jnp, op-for-op the Pallas kernel body
+    (``kernel._jacobi_kernel``), so boundary rows computed outside the grid
+    are bit-exact with interior rows computed inside it."""
+    left = jnp.roll(sl, 1, axis=1)
+    right = jnp.roll(sl, -1, axis=1)
+    inner = (sa + sb + left + right) * jnp.asarray(0.25, sl.dtype)
+    j = jax.lax.broadcasted_iota(jnp.int32, sl.shape, 1)
+    interior = (j >= 1) & (j <= n_cols - 2)
+    return jnp.where(interior, inner, sl)
 
-    ``src`` is this shard's (N_local, M) horizontal stripe of the grid.
-    One-row halos arrive from the neighbors via ``ppermute`` (the edge
-    shards' missing halo is zeros -- harmless, their edge rows are the
-    global boundary and are copied through), the local block shape is
-    re-planned on the stripe (``plan_for(..., local=True)``), and the
-    existing three-shifted-views Pallas stencil sweeps it.
+
+def _halo_exchange(src, row_axes, n_shards, idx):
+    """Issue the one-row halo transfers.  My up-neighbor's last row arrives
+    as ``above``, my down-neighbor's first row as ``below``; shard 0 /
+    n-1 receive zeros they never read (their edge rows are the global
+    boundary and are copied through)."""
+    nl, m = src.shape
+    if len(row_axes) == 1:
+        axis = row_axes[0]
+        down_perm = [(i, i + 1) for i in range(n_shards - 1)]
+        up_perm = [(i, i - 1) for i in range(1, n_shards)]
+        above = jax.lax.ppermute(src[-1:], axis, down_perm)
+        below = jax.lax.ppermute(src[:1], axis, up_perm)
+    else:  # multi-axis row sharding: gather the boundary rows instead
+        edges = jnp.concatenate([src[:1], src[-1:]], axis=0)
+        gathered = jax.lax.all_gather(edges, row_axes, tiled=False)
+        gathered = gathered.reshape(n_shards, 2, m)
+        above = jnp.where(idx > 0, gathered[idx - 1, 1:2], 0.0)
+        below = jnp.where(idx < n_shards - 1,
+                          gathered[(idx + 1) % n_shards, 0:1], 0.0)
+    return above, below
+
+
+def _spmd_jacobi(ctx, src):
+    """shard_map body: *overlapped* halo-exchange Jacobi on a row stripe.
+
+    ``src`` is this shard's (N_local, M) horizontal stripe.  The stripe
+    splits into an interior (output rows 1..N_local-2, which read only
+    locally-resident rows) and the two boundary rows that need a neighbor
+    halo.  The halo ``ppermute`` is issued *first* and nothing the interior
+    Pallas sweep reads depends on it, so the lowered program is free to run
+    the collective-permute start/done pair concurrently with the interior
+    sweep -- the wire time hides behind the interior compute window
+    (docs/OVERLAP.md) instead of serializing ahead of it like the PR-5
+    exchange-then-compute body (kept as ``_spmd_jacobi_blocking`` for
+    parity tests).  The halo slabs are buffers distinct from ``src``: the
+    body only reads them in the final boundary-row stitch.
     """
     row_axes = ctx.axes(0, 0)
     n_shards = ctx.size(row_axes)
@@ -66,21 +113,52 @@ def _spmd_jacobi(ctx, src):
         return _step(src, plan=plan)
     nl, m = src.shape
     idx = ctx.index(row_axes)
-    if len(row_axes) == 1:
-        axis = row_axes[0]
-        down_perm = [(i, i + 1) for i in range(n_shards - 1)]
-        up_perm = [(i, i - 1) for i in range(1, n_shards)]
-        # halo above my first row = my up-neighbor's last row, and vice
-        # versa; shard 0 / n-1 receive zeros they never read.
-        above = jax.lax.ppermute(src[-1:], axis, down_perm)
-        below = jax.lax.ppermute(src[:1], axis, up_perm)
-    else:  # multi-axis row sharding: gather the boundary rows instead
-        edges = jnp.concatenate([src[:1], src[-1:]], axis=0)
-        gathered = jax.lax.all_gather(edges, row_axes, tiled=False)
-        gathered = gathered.reshape(n_shards, 2, m)
-        above = jnp.where(idx > 0, gathered[idx - 1, 1:2], 0.0)
-        below = jnp.where(idx < n_shards - 1,
-                          gathered[(idx + 1) % n_shards, 0:1], 0.0)
+    # 1) issue the halo exchange for this sweep ...
+    above, below = _halo_exchange(src, row_axes, n_shards, idx)
+    if nl > 2:
+        # 2) ... sweep the interior stripe while it is in flight: output
+        # rows 1..nl-2 read src rows 0..nl-1 only, on the locally planned
+        # block shape (the plan cell is the full stripe, so the memo key
+        # matches what validate --comm prices for this shard).
+        plan = dispatch.plan_for("jacobi", (nl, m), src.dtype, local=True)
+        prow, width = plan.padded_shape
+
+        def pad(a):
+            return jnp.pad(a, ((0, prow - a.shape[0]), (0, width - m)))
+
+        interior = kernel.jacobi_rows(
+            pad(src[:-2]), pad(src[2:]), pad(src[1:-1]),
+            n_cols=m, brows=plan.block_rows)[:nl - 2, :m]
+        # 3) boundary rows last: the only reads of the arrived halo slabs.
+        top = _row_stencil(above, src[1:2], src[0:1], m)
+        bot = _row_stencil(src[-2:-1], below, src[-1:], m)
+        out = jnp.concatenate([top, interior, bot], axis=0)
+    else:
+        # Degenerate stripe: every row is a boundary row, nothing to hide
+        # the exchange behind (predicted_exposed_comm_bytes says the same).
+        ext = jnp.concatenate([above, src, below], axis=0)
+        out = _row_stencil(ext[:-2], ext[2:], ext[1:-1], m)
+    # Global boundary rows pass through: shard 0's first row and the last
+    # shard's last row are the grid edge, not interior sites.
+    r = jax.lax.broadcasted_iota(jnp.int32, (nl, 1), 0)
+    edge = ((idx == 0) & (r == 0)) | ((idx == n_shards - 1) & (r == nl - 1))
+    return jnp.where(edge, src, out)
+
+
+def _spmd_jacobi_blocking(ctx, src):
+    """The PR-5 exchange-then-compute shard body, retained as the parity
+    oracle for the overlapped body above (and as the counter-example
+    ``api.spmd.overlap_report`` classifies as blocking): the whole stripe
+    waits for the halo before any site is swept."""
+    row_axes = ctx.axes(0, 0)
+    n_shards = ctx.size(row_axes)
+    if n_shards <= 1:
+        shape, dtype = _plan_args(src)
+        plan = dispatch.plan_for("jacobi", shape, dtype, local=True)
+        return _step(src, plan=plan)
+    nl, m = src.shape
+    idx = ctx.index(row_axes)
+    above, below = _halo_exchange(src, row_axes, n_shards, idx)
     plan = dispatch.plan_for("jacobi", (nl, m), src.dtype, local=True)
     prow, width = plan.padded_shape
     ext = jnp.concatenate([above, src, below], axis=0)      # (nl + 2, m)
@@ -90,8 +168,6 @@ def _spmd_jacobi(ctx, src):
     sl = padded[1:-1][:prow]
     out = kernel.jacobi_rows(sa, sb, sl, n_cols=m,
                              brows=plan.block_rows)[:nl, :m]
-    # Global boundary rows pass through: shard 0's first row and the last
-    # shard's last row are the grid edge, not interior sites.
     r = jax.lax.broadcasted_iota(jnp.int32, (nl, 1), 0)
     edge = ((idx == 0) & (r == 0)) | ((idx == n_shards - 1) & (r == nl - 1))
     return jnp.where(edge, src, out)
@@ -126,6 +202,19 @@ def _sweeps(src, *, iters, plan):
 
 
 def jacobi_sweeps(src: jax.Array, iters: int) -> jax.Array:
+    # Under an ambient multi-device mesh, route every sweep through the
+    # shard_map path (a pinned plan would force the single-device body):
+    # the overlapped body issues sweep k's halo before its interior
+    # compute, so consecutive sweeps pipeline -- while sweep k's boundary
+    # stitch waits on its halo, sweep k-1's interior work is still
+    # draining.  Re-launching per iteration keeps the plan resolution
+    # inside the loop body, where each shard plans its local stripe.
+    if spmd_lib.spmd_mesh() is not None:
+        return jax.jit(
+            lambda x0: jax.lax.fori_loop(
+                0, iters, lambda _, x: dispatch.launch("jacobi", x), x0
+            )
+        )(src)
     # Resolve the plan outside the jitted loop: jit's trace cache keys on
     # shapes/statics only, so an ambient plan_context change must surface
     # here (as a new static plan), not be masked by a stale trace.

@@ -6,6 +6,15 @@ Pad multiples and block shapes come from the planner's VMEM-budget analysis
 of the 19+19 streams; the flatten/pad helper routes through the plan's
 padded shape, so the lattice is padded exactly once even when the plan has
 widened the minor dim beyond the block multiple (e.g. for a mesh).
+
+Under an SPMD mesh the lattice shards its X axis over the data axis with
+*per-direction* halo depths: of D3Q19's 19 directions, 5 have c_x = +1,
+5 have c_x = -1 and 9 never cross an X cut, so one streaming step
+ppermutes two (5, 1, Y, Z) slabs around the (periodic) ring instead of
+replicating the whole lattice.  The shard body is overlapped
+(docs/OVERLAP.md): slabs are issued first, the interior planes (which pull
+only from locally-resident planes) propagate+collide while they fly, and
+only the two boundary planes read the arriving slabs.
 """
 from __future__ import annotations
 
@@ -15,10 +24,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.api import dispatch
+from repro.api import spmd as spmd_lib
 from repro.api.registry import register_kernel
-from repro.api.spmd import replicated
+from repro.api.spmd import Partitioning
 from repro.core.aliasing import InterleavedMemoryModel
 from repro.core.autotune import StreamSignature, choose_layout
+from repro.core.layout import LANES, round_up
 from repro.kernels._shims import deprecated_wrapper
 from repro.kernels.lbm import kernel, ref
 from repro.kernels.lbm.ref import Q
@@ -26,6 +37,13 @@ from repro.kernels.lbm.ref import Q
 LAYOUTS = ("soa", "ivjk")
 
 _SIG = StreamSignature(n_read=19, n_write=19)
+
+# Direction indices by x-component: the per-direction halo depth |c_x| is 1
+# for the 5+5 directions crossing an X cut and 0 for the rest (the planner's
+# _comm_lbm prices exactly these two 5-plane slabs).
+_PLUS_X = tuple(v for v in range(Q) if int(ref.C[v][0]) == 1)
+_MINUS_X = tuple(v for v in range(Q) if int(ref.C[v][0]) == -1)
+_ZERO_X = tuple(v for v in range(Q) if int(ref.C[v][0]) == 0)
 
 
 def _plan_args(f, **_scalars):
@@ -76,18 +94,184 @@ def _lbm_ref(f, *, omega, mask=None):
     return post if mask is None else jnp.where(mask[None], post, f)
 
 
-# Streaming (propagate) shifts every site into its neighbors each step:
-# a lattice split would need halo exchanges, so both layouts run
-# replicated under the SPMD path.
+# ---- SPMD: X-sharded lattice with per-direction halos ----------------------
+
+def _roll_yz(a, v: int):
+    """The y/z part of direction ``v``'s pull shift (the x part is handled
+    by plane selection / the halo slab)."""
+    cy, cz = int(ref.C[v][1]), int(ref.C[v][2])
+    return jnp.roll(a, shift=(cy, cz), axis=(-2, -1))
+
+
+def _halo_exchange_x(f, x_axes, n_shards, idx):
+    """Issue the per-direction halo transfers for one streaming step.
+
+    Only the 10 directions with nonzero c_x cross the X cut, at depth
+    |c_x| = 1: the last local plane of the 5 +x-moving populations goes
+    down-ring (arriving as ``halo_lo``, what my x=0 plane pulls) and the
+    first plane of the 5 -x-moving populations goes up-ring (``halo_hi``).
+    The ring wraps because the global propagate is periodic -- edge shards
+    exchange across the domain boundary, not zeros.
+    """
+    plus_last = f[jnp.array(_PLUS_X)][:, -1:]      # (5, 1, Y, Z)
+    minus_first = f[jnp.array(_MINUS_X)][:, :1]    # (5, 1, Y, Z)
+    if len(x_axes) == 1:
+        ax = x_axes[0]
+        down = [(j, (j + 1) % n_shards) for j in range(n_shards)]
+        up = [(j, (j - 1) % n_shards) for j in range(n_shards)]
+        halo_lo = jax.lax.ppermute(plus_last, ax, down)
+        halo_hi = jax.lax.ppermute(minus_first, ax, up)
+    else:  # multi-axis X sharding: gather the boundary slabs instead
+        edges = jnp.concatenate([plus_last, minus_first], axis=1)
+        gathered = jax.lax.all_gather(edges, x_axes, tiled=False)
+        gathered = gathered.reshape((n_shards,) + edges.shape)
+        halo_lo = gathered[(idx - 1) % n_shards][:, :1]
+        halo_hi = gathered[(idx + 1) % n_shards][:, 1:]
+    return halo_lo, halo_hi
+
+
+def _propagate_interior(f):
+    """Pull-propagated planes 1..XL-2 of this shard's (Q, XL, Y, Z) stripe
+    -- every pull source is locally resident, so this work is independent
+    of the in-flight halo slabs."""
+    parts = [None] * Q
+    for v in _ZERO_X:
+        parts[v] = _roll_yz(f[v][1:-1], v)
+    for v in _PLUS_X:
+        parts[v] = _roll_yz(f[v][:-2], v)
+    for v in _MINUS_X:
+        parts[v] = _roll_yz(f[v][2:], v)
+    return jnp.stack(parts, axis=0)
+
+
+def _propagate_boundary(f, halo_lo, halo_hi):
+    """The two boundary planes of the pull propagate -- the only planes
+    that read the arriving halo slabs.  Valid for XL >= 2."""
+    lo = [None] * Q
+    hi = [None] * Q
+    for v in _ZERO_X:
+        lo[v] = _roll_yz(f[v][:1], v)
+        hi[v] = _roll_yz(f[v][-1:], v)
+    for k, v in enumerate(_PLUS_X):
+        lo[v] = _roll_yz(halo_lo[k], v)
+        hi[v] = _roll_yz(f[v][-2:-1], v)
+    for k, v in enumerate(_MINUS_X):
+        lo[v] = _roll_yz(f[v][1:2], v)
+        hi[v] = _roll_yz(halo_hi[k], v)
+    return jnp.stack(lo, axis=0), jnp.stack(hi, axis=0)
+
+
+def _collide_planes(fprop, omega):
+    """BGK collision of a small (Q, planes, Y, Z) boundary slab, through
+    the same Pallas kernel as the interior (one whole-slab block).  Plain
+    jnp here is *almost* right but lets XLA contract the collision's
+    multiply-adds differently depending on what it fuses with, which
+    breaks last-ulp parity with the single-device path; one more
+    pallas_call keeps the arithmetic identical.  SoA layout regardless of
+    the interior layout -- the slab is a few planes, the layout choice is
+    a bandwidth decision that doesn't apply at this size."""
+    flat = fprop.reshape(Q, -1)
+    s = flat.shape[1]
+    spad = round_up(s, LANES)
+    if spad != s:
+        flat = jnp.pad(flat, ((0, 0), (0, spad - s)))
+    post = kernel.collide_soa(flat, omega, bs=spad)[:, :s]
+    return post.reshape(fprop.shape)
+
+
+def _collide_planes_planned(fprop, omega, layout: str):
+    """Collide a propagated (Q, planes, Y, Z) slab through the layout's
+    Pallas kernel on a locally planned block shape."""
+    plan = dispatch.plan_for(f"lbm.{layout}", tuple(fprop.shape),
+                             fprop.dtype, local=True)
+    flat, s = _flatten_pad(fprop, plan)
+    if layout == "soa":
+        post = kernel.collide_soa(flat, omega, bs=plan.block_cols)[:, :s]
+    else:
+        ivjk = flat.reshape(Q, -1, 128).transpose(1, 0, 2)
+        post = kernel.collide_ivjk(ivjk, omega, bsb=plan.block_rows)
+        post = post.transpose(1, 0, 2).reshape(Q, -1)[:, :s]
+    return post.reshape(fprop.shape)
+
+
+def _spmd_lbm_step(ctx, x_axes, f, layout, omega, mask):
+    """Overlapped shard body shared by both layouts: issue the halo slabs,
+    propagate+collide the interior planes while they fly, then finish the
+    two boundary planes from the arrived slabs (docs/OVERLAP.md)."""
+    n_shards = ctx.size(x_axes)
+    if n_shards <= 1:
+        # X whole on this shard (divisibility fallback or size-1 data
+        # axis): the single-device step on a locally planned block.
+        shape, dtype = _plan_args(f)
+        plan = dispatch.plan_for(f"lbm.{layout}", shape, dtype, local=True)
+        step = _step_soa if layout == "soa" else _step_ivjk
+        return step(f, omega, mask, plan=plan)
+    q, xl, y, z = f.shape
+    idx = ctx.index(x_axes)
+    # The mask rides along replicated (scalars close over the body); each
+    # shard slices its own X planes.
+    mask_l = None
+    if mask is not None:
+        mask_l = jax.lax.dynamic_slice_in_dim(mask, idx * xl, xl, axis=0)
+    # 1) issue the halo exchange for this step ...
+    halo_lo, halo_hi = _halo_exchange_x(f, x_axes, n_shards, idx)
+    if xl > 2:
+        # 2) ... propagate+collide the interior planes while it is in
+        # flight (plan cell: the interior slab this shard actually sweeps)
+        post_int = _collide_planes_planned(_propagate_interior(f), omega,
+                                           layout)
+        # 3) boundary planes last: the only reads of the arrived slabs.
+        flo, fhi = _propagate_boundary(f, halo_lo, halo_hi)
+        out = jnp.concatenate(
+            [_collide_planes(flo, omega), post_int,
+             _collide_planes(fhi, omega)], axis=1)
+    elif xl == 2:
+        # Degenerate stripe: both planes are boundary planes, nothing to
+        # hide the exchange behind (predicted_exposed_comm_bytes agrees).
+        flo, fhi = _propagate_boundary(f, halo_lo, halo_hi)
+        out = _collide_planes(jnp.concatenate([flo, fhi], axis=1), omega)
+    else:
+        parts = [None] * Q
+        for v in _ZERO_X:
+            parts[v] = _roll_yz(f[v], v)
+        for k, v in enumerate(_PLUS_X):
+            parts[v] = _roll_yz(halo_lo[k], v)
+        for k, v in enumerate(_MINUS_X):
+            parts[v] = _roll_yz(halo_hi[k], v)
+        out = _collide_planes(jnp.stack(parts, axis=0), omega)
+    return out if mask_l is None else jnp.where(mask_l[None], out, f)
+
+
+def _spmd_lbm_soa(ctx, f, *, omega, mask=None):
+    """shard_map body: X-sharded SoA lattice with per-direction halos."""
+    x_axes = ctx.axes(0, 1)
+    return _spmd_lbm_step(ctx, x_axes, f, "soa", omega, mask)
+
+
+def _spmd_lbm_ivjk(ctx, f, *, omega, mask=None):
+    """shard_map body: X-sharded IvJK lattice with per-direction halos."""
+    x_axes = ctx.axes(0, 1)
+    return _spmd_lbm_step(ctx, x_axes, f, "ivjk", omega, mask)
+
+
+# The lattice shards its X axis ("batch" -> the data mesh axis); streaming
+# across the cut travels as the two 5-direction halo slabs the spmd_body
+# exchanges, so the lattice is no longer replicated per device.
+_LBM_PART = Partitioning(in_axes=((None, "batch", None, None),),
+                         out_axes=(None, "batch", None, None))
+
+
 @register_kernel("lbm.soa", signature=_SIG, ref=_lbm_ref,
-                 plan_args=_plan_args, partitioning=replicated(1))
+                 plan_args=_plan_args, partitioning=_LBM_PART,
+                 spmd_body=_spmd_lbm_soa)
 def _launch_soa(plan, f, *, omega, mask=None):
     """Propagate (lax roll) + Pallas BGK collision, f stored (Q, S)."""
     return _step_soa(f, omega, mask, plan=plan)
 
 
 @register_kernel("lbm.ivjk", signature=_SIG, ref=_lbm_ref,
-                 plan_args=_plan_args, partitioning=replicated(1))
+                 plan_args=_plan_args, partitioning=_LBM_PART,
+                 spmd_body=_spmd_lbm_ivjk)
 def _launch_ivjk(plan, f, *, omega, mask=None):
     """Collision with directions interleaved at lane granularity
     (the paper's auto-skewed IvJK layout)."""
@@ -121,6 +305,18 @@ def lbm_run(f: jax.Array, omega: float, iters: int, *,
             layout: str = "ivjk") -> jax.Array:
     if layout not in LAYOUTS:
         raise ValueError(f"layout must be one of {LAYOUTS}")
+    # Under an ambient multi-device mesh, route every step through the
+    # shard_map path (a pinned plan would force the single-device body);
+    # consecutive steps pipeline -- step k+1's halo slabs fly while step
+    # k's interior planes are still colliding.
+    if spmd_lib.spmd_mesh() is not None:
+        return jax.jit(
+            lambda f0: jax.lax.fori_loop(
+                0, iters,
+                lambda _, x: dispatch.launch(f"lbm.{layout}", x,
+                                             omega=omega), f0,
+            )
+        )(f)
     # Plan outside the jitted loop so an ambient plan_context change shows
     # up as a new static plan instead of being masked by jit's trace cache.
     plan = dispatch.plan_for(f"lbm.{layout}", tuple(f.shape), f.dtype)

@@ -18,20 +18,27 @@ envelopes; a planner or kernel-wrapper change that moves real traffic out
 of its family's envelope fails validation loudly.
 
 A second, SPMD-only check covers *communication*: for the kernel families
-whose partitioning communicates (vocab-parallel xent's lse combine,
-jacobi's halo exchange), ``--comm`` lowers the shard_map launch under a
-real multi-device mesh, runs the collective census on the compiled HLO
-(``launch.lowering.collective_census``, the same ring cost model the
-planner's ``predicted_comm_bytes`` uses), and checks measured wire bytes
-against the *local* plan's prediction.  This needs forced host devices:
+whose partitioning communicates (vocab-parallel xent's lse combine, the
+jacobi and LBM halo exchanges), ``--comm`` lowers the shard_map launch
+under a real multi-device mesh, runs the collective census on the
+compiled HLO (``launch.lowering.collective_census``, the same ring cost
+model the planner's ``predicted_comm_bytes`` uses), and checks measured
+wire bytes against the *local* plan's prediction.  Adding ``--exposed``
+also checks the *overlap structure* (docs/OVERLAP.md): it walks the
+launch jaxpr with ``api.spmd.overlap_report``, requires the halo
+families' collectives to be overlappable (independent of the interior
+Pallas sweep in both dataflow directions), and compares the wire bytes
+left on the critical path against the plan's
+``predicted_exposed_comm_bytes``.  Both need forced host devices:
 
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \
-        python -m repro.measure.validate --comm --mesh 2x4
+        python -m repro.measure.validate --comm --exposed --mesh 2x4
 
 Usage:
     python -m repro.measure.validate --all
     python -m repro.measure.validate --family stream --out /tmp/v.json
     python -m repro.measure.validate --comm --mesh 2x4
+    python -m repro.measure.validate --comm --exposed --mesh 8x1
 """
 from __future__ import annotations
 
@@ -139,10 +146,14 @@ TOLERANCES: dict[str, Tolerance] = {
 
 # Representative *global* cells for the communicating families, chosen
 # divisible by every mesh in the CI matrix (data/model up to 8) so the
-# declared partitioning actually engages.
+# declared partitioning actually engages.  The LBM X extent (32) keeps an
+# interior stripe at every CI data size (local XL in {4, 16, 32}), so the
+# overlap structure the --exposed check requires is actually present.
 COMM_CASES: dict[str, tuple[tuple[int, ...], str]] = {
     "xent": ((64, 4096), "float32"),
     "jacobi": ((64, 258), "float32"),
+    "lbm.soa": ((19, 32, 8, 8), "float32"),
+    "lbm.ivjk": ((19, 32, 8, 8), "float32"),
 }
 
 # The census applies the exact ring formulas the planner's COMM_MODEL uses,
@@ -154,6 +165,8 @@ COMM_CASES: dict[str, tuple[tuple[int, ...], str]] = {
 COMM_TOLERANCES: dict[str, Tolerance] = {
     "xent": Tolerance(0.5, 2.0),
     "jacobi": Tolerance(0.5, 2.0),
+    "lbm.soa": Tolerance(0.5, 2.0),
+    "lbm.ivjk": Tolerance(0.5, 2.0),
 }
 
 
@@ -241,9 +254,112 @@ def validate_comm_kernel(kernel: str, mesh, *, shape=None, dtype=None) -> dict:
     }
 
 
-def validate_comm(mesh, kernels=None) -> list[dict]:
+def _site_wire_bytes(site, sizes: Mapping[str, int]) -> float:
+    """Per-device ring wire bytes for one jaxpr collective site -- the same
+    cost model ``lowering.collective_census`` applies to the HLO ops, so
+    the two measurements agree when the lowering is one-op-per-site."""
+    n = 1
+    for a in site.axes:
+        n *= int(sizes.get(a, 1))
+    b = float(site.result_bytes)
+    if site.primitive in ("psum", "psum_invariant", "pmax", "pmin",
+                          "pbroadcast"):
+        return 2.0 * (n - 1) / max(n, 1) * b      # all-reduce ring
+    if site.primitive in ("all_gather", "all_to_all"):
+        return (n - 1) / max(n, 1) * b
+    if site.primitive == "reduce_scatter":
+        return float(n - 1) * b
+    return b                                       # collective-permute
+
+
+def validate_exposed_kernel(kernel: str, mesh, *, shape=None,
+                            dtype=None) -> dict:
+    """One exposed-comm record: is the halo structured as overlappable,
+    and do the wire bytes left on the critical path match
+    ``predicted_exposed_comm_bytes``?
+
+    The measurement is structural, from the launch jaxpr
+    (``api.spmd.overlap_report``): collectives some Pallas call is
+    independent of may hide behind that compute, so only the overflow
+    past the plan's hiding capacity (predicted total minus predicted
+    exposed) stays on the critical path; blocking collectives are fully
+    exposed.  Halo families (``planner.HALO_MODEL``) additionally *fail*
+    if any of their collectives is blocking -- that is the
+    exchange-then-compute regression this check exists to catch.
+    """
+    from repro.api import spmd as spmd_lib
+    from repro.core import planner as planner_lib
+
+    if shape is None or dtype is None:
+        shape, dtype = COMM_CASES[kernel]
+    args, scalars = args_for(kernel, shape, dtype)
+    with api.plan_context(mesh=mesh):
+        local = local_shard_shape(kernel, shape, dtype, mesh)
+        plan = api.plan_for(kernel, local, dtype, local=True)
+        rep = spmd_lib.overlap_report(
+            lambda *arrays: api.launch(kernel, *arrays, **scalars), *args)
+    sizes = _mesh_sizes(mesh)
+    blocking = sum(_site_wire_bytes(s, sizes) for s in rep.collectives
+                   if not s.overlappable)
+    overlappable = sum(_site_wire_bytes(s, sizes) for s in rep.collectives
+                       if s.overlappable)
+    predicted_total = plan.predicted_comm_bytes
+    predicted = plan.predicted_exposed_comm_bytes
+    hidden_capacity = predicted_total - predicted
+    measured = blocking + max(0.0, overlappable - hidden_capacity)
+    if predicted:
+        ratio = measured / predicted
+    else:
+        ratio = 0.0 if measured == 0 else float("inf")
+    tol = COMM_TOLERANCES[kernel]
+    halo = kernel in planner_lib.HALO_MODEL
+    structure_ok = (rep.all_overlappable and bool(rep.collectives)
+                    if halo and predicted_total else True)
+    ok = structure_ok and (tol.holds(ratio) if predicted else measured == 0)
+    if obs.enabled():
+        obs.emit(obs.ValidationEvent(
+            kernel=kernel, family=kernel.split(".")[0], check="exposed_comm",
+            predicted_bytes=float(predicted), measured_bytes=float(measured),
+            ratio=ratio if ratio != float("inf") else -1.0,
+            status="ok" if ok else "fail",
+            mesh=tuple(sorted(sizes.items()))))
+    return {
+        "kernel": kernel,
+        "family": kernel.split(".")[0],
+        "check": "exposed_comm",
+        "shape": list(shape),
+        "dtype": str(jnp.dtype(dtype).name),
+        "mesh": sizes,
+        "local_shape": list(local),
+        "predicted": {"comm_bytes": predicted_total,
+                      "exposed_comm_bytes": predicted},
+        "measured": {
+            "exposed_wire_bytes": measured,
+            "blocking_wire_bytes": blocking,
+            "overlappable_wire_bytes": overlappable,
+            "n_pallas_calls": rep.n_pallas_calls,
+            "collectives": [
+                {"primitive": s.primitive, "axes": list(s.axes),
+                 "result_bytes": s.result_bytes,
+                 "overlappable": s.overlappable}
+                for s in rep.collectives
+            ],
+        },
+        "structure_ok": structure_ok,
+        "ratio": round(ratio, 4) if ratio != float("inf") else "inf",
+        "tolerance": [tol.lo, tol.hi],
+        "status": "ok" if ok else "fail",
+    }
+
+
+def validate_comm(mesh, kernels=None, *, exposed: bool = False) -> list[dict]:
     names = list(kernels) if kernels is not None else sorted(COMM_CASES)
-    return [validate_comm_kernel(k, mesh) for k in names]
+    records = []
+    for k in names:
+        records.append(validate_comm_kernel(k, mesh))
+        if exposed:
+            records.append(validate_exposed_kernel(k, mesh))
+    return records
 
 
 def mesh_from_spec(spec: str):
@@ -398,6 +514,11 @@ def main(argv=None) -> int:
                     help="validate predicted_comm_bytes against the "
                          "collective census of the SPMD launch (needs a "
                          "multi-device mesh; see --mesh)")
+    ap.add_argument("--exposed", action="store_true",
+                    help="with --comm: also check the overlap structure "
+                         "(halo collectives independent of the interior "
+                         "Pallas sweep) and the exposed-comm envelope "
+                         "against predicted_exposed_comm_bytes")
     ap.add_argument("--mesh", default="2x4",
                     help="DxM (data x model) host mesh for --comm")
     ap.add_argument("--out", default=OUT_DEFAULT)
@@ -416,6 +537,9 @@ def main(argv=None) -> int:
 
 
 def _run(ap, args) -> int:
+    if args.exposed and not args.comm:
+        ap.error("--exposed is a --comm mode (it checks the SPMD launch's "
+                 "overlap structure); pass both")
     if args.comm:
         mesh = mesh_from_spec(args.mesh)
         if args.kernel:
@@ -424,14 +548,25 @@ def _run(ap, args) -> int:
                 ap.error(f"no comm cell for {sorted(unknown)}; only the "
                          f"communicating families have one: "
                          f"{sorted(COMM_CASES)}")
-        records = validate_comm(mesh, kernels=args.kernel or None)
+        records = validate_comm(mesh, kernels=args.kernel or None,
+                                exposed=args.exposed)
         for r in records:
-            print(f"[{r['status']:4s}] comm {r['kernel']:8s} "
-                  f"mesh={r['mesh']} "
-                  f"measured={r['measured']['wire_bytes']:.3e} "
-                  f"predicted={r['predicted']['comm_bytes']:.3e} "
-                  f"ratio={r['ratio']} "
-                  f"tol=[{r['tolerance'][0]}, {r['tolerance'][1]}]")
+            if r["check"] == "exposed_comm":
+                m = r["measured"]
+                n_over = sum(c["overlappable"] for c in m["collectives"])
+                print(f"[{r['status']:4s}] exposed {r['kernel']:8s} "
+                      f"mesh={r['mesh']} "
+                      f"measured={m['exposed_wire_bytes']:.3e} "
+                      f"predicted={r['predicted']['exposed_comm_bytes']:.3e} "
+                      f"ratio={r['ratio']} "
+                      f"overlappable={n_over}/{len(m['collectives'])}")
+            else:
+                print(f"[{r['status']:4s}] comm {r['kernel']:8s} "
+                      f"mesh={r['mesh']} "
+                      f"measured={r['measured']['wire_bytes']:.3e} "
+                      f"predicted={r['predicted']['comm_bytes']:.3e} "
+                      f"ratio={r['ratio']} "
+                      f"tol=[{r['tolerance'][0]}, {r['tolerance'][1]}]")
         write_report(records, args.out)
         n_fail = sum(r["status"] != "ok" for r in records)
         print(f"wrote {len(records)} comm records -> {args.out}"

@@ -22,11 +22,18 @@ GOLDEN_PATH = os.path.join(os.path.dirname(__file__), "golden", "plans.json")
 # extents exercise every padding rule; even ones must plan tight.
 # Per-shard (local=True) cells for the SPMD launch path, planned under a
 # mapping mesh (no devices needed): these pin the communication model --
-# ``predicted_comm_bytes`` for jacobi's halo rows and xent's lse combine --
-# alongside the local block geometry.  Meshes are (axis, size) pairs.
+# ``predicted_comm_bytes`` for the jacobi/LBM halos and xent's lse
+# combine, plus the overlap model's un-hideable remainder
+# ``predicted_exposed_comm_bytes`` (docs/OVERLAP.md) -- alongside the
+# local block geometry.  The thin jacobi (8, 258) stripe pins a
+# partially-exposed cell (interior window too small to hide the halo).
+# Meshes are (axis, size) pairs.
 SPMD_LOCAL_CELLS: list[tuple[str, tuple[int, ...], str, tuple]] = [
     ("jacobi", (32, 258), "float32", (("data", 8), ("model", 1))),
     ("jacobi", (32, 258), "float32", (("data", 2), ("model", 4))),
+    ("jacobi", (8, 258), "float32", (("data", 8), ("model", 1))),
+    ("lbm.soa", (19, 4, 8, 8), "float32", (("data", 8), ("model", 1))),
+    ("lbm.ivjk", (19, 4, 8, 8), "float32", (("data", 8), ("model", 1))),
     ("xent", (32, 512), "float32", (("data", 2), ("model", 4))),
     ("xent", (64, 512), "float32", (("data", 1), ("model", 8))),
     ("rmsnorm", (64, 129), "float32", (("data", 2), ("model", 4))),
@@ -58,6 +65,7 @@ def snapshot_plan(plan: KernelPlan) -> dict:
         "predicted_hbm_bytes": plan.predicted_hbm_bytes,
         "predicted_logical_bytes": plan.predicted_logical_bytes,
         "predicted_comm_bytes": plan.predicted_comm_bytes,
+        "predicted_exposed_comm_bytes": plan.predicted_exposed_comm_bytes,
         "predicted_balance": round(plan.predicted_balance, 4),
         "naive_balance": round(plan.naive_balance, 4),
     }

@@ -577,6 +577,32 @@ class TestReport:
         assert ba["mean_waste_frac"] == pytest.approx(6 / 8)
         assert s["profile_drift"]["cells"] == ["rmsnorm (8, 128)"]
 
+    def test_exposed_comm_validation_aggregates(self):
+        """exposed_comm validation events (validate --comm --exposed) land
+        in their own family/check bucket with worst-ratio and fail counts,
+        with no report-side changes needed."""
+        evs = [
+            events.ValidationEvent(
+                kernel="jacobi", family="jacobi", check="exposed_comm",
+                predicted_bytes=1308.0, measured_bytes=1308.0, ratio=1.0,
+                status="ok", mesh=(("data", 8), ("model", 1))),
+            events.ValidationEvent(
+                kernel="lbm.soa", family="lbm", check="exposed_comm",
+                predicted_bytes=1373.0, measured_bytes=2746.0, ratio=2.0,
+                status="fail", mesh=(("data", 8), ("model", 1))),
+            events.ValidationEvent(
+                kernel="jacobi", family="jacobi", check="comm",
+                predicted_bytes=2064.0, measured_bytes=2064.0, ratio=1.0,
+                status="ok"),
+        ]
+        s = report.aggregate([e.to_record() for e in evs])
+        val = s["validation"]
+        assert val["jacobi/exposed_comm"]["worst"] == pytest.approx(1.0)
+        assert val["jacobi/exposed_comm"]["fails"] == 0
+        assert val["lbm/exposed_comm"]["fails"] == 1
+        assert val["lbm/exposed_comm"]["worst"] == pytest.approx(2.0)
+        assert val["jacobi/comm"]["fails"] == 0
+
     def test_render_is_stable_when_empty(self):
         text = report.render(report.aggregate([]))
         for section in ("events: 0", "plan cache:", "spmd fallbacks: 0",

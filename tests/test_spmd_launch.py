@@ -25,6 +25,14 @@ What the mesh tests pin down:
     vocabs fall back to replication with a logged reason;
   * jacobi is *halo-exchange*: grid rows shard over the data axis with
     one-row ppermute halos, exact at every shard boundary;
+  * LBM is halo-exchange too: the X axis shards over the data axis with
+    *per-direction* halo depth (only the 2x5 D3Q19 directions with
+    c_x != 0 travel), bit-exact vs the single-device step;
+  * both stencil bodies are *overlapped* (docs/OVERLAP.md): the halo
+    ppermutes are independent of the interior Pallas sweep in the jaxpr
+    (``api.spmd.overlap_report``), and the planner's
+    ``predicted_exposed_comm_bytes`` prices what stays on the critical
+    path (``repro.measure.validate --comm --exposed``);
   * each shard plans its own *local* block shape, and the planner's
     ``predicted_comm_bytes`` matches the collective census of the lowered
     program (``repro.measure.validate --comm``).
@@ -117,13 +125,33 @@ class TestDeclarations:
         assert entry.partitioning.out_axes == ("batch", None)
         assert entry.spmd_body is not None
 
-    def test_lbm_stays_replicated(self):
-        """Streaming shifts couple every site pair across a split: both LBM
-        layouts keep the replicated declaration and no spmd_body."""
+    def test_lbm_declares_halo_exchange(self):
+        """Both LBM layouts shard the X axis and own their per-direction
+        halo exchange (the lattice is no longer replicated)."""
         for name in ("lbm.soa", "lbm.ivjk"):
             entry = api.get_kernel(name)
-            assert entry.spmd_body is None
-            assert all(ax == (...,) for ax in entry.partitioning.in_axes)
+            assert entry.spmd_body is not None, name
+            assert entry.partitioning.in_axes[0] == (None, "batch", None,
+                                                     None), name
+            assert entry.partitioning.out_axes == (None, "batch", None,
+                                                   None), name
+
+    def test_lbm_directional_halo_depths(self):
+        """D3Q19 splits 5/5/9 over c_x: only the +x / -x direction groups
+        cross an X cut, so the halo slab is (5, 1, Y, Z) per side -- the
+        per-direction depth the comm model prices."""
+        from repro.kernels.lbm import ops as lops
+        from repro.kernels.lbm import ref as lref
+
+        assert len(lops._PLUS_X) == 5
+        assert len(lops._MINUS_X) == 5
+        assert len(lops._ZERO_X) == 9
+        for v in lops._PLUS_X:
+            assert int(lref.C[v][0]) == 1
+        for v in lops._MINUS_X:
+            assert int(lref.C[v][0]) == -1
+        for v in lops._ZERO_X:
+            assert int(lref.C[v][0]) == 0
 
     def test_template_expansion(self):
         assert spmd._expand(("batch", ..., None), 2) == ("batch", None)
@@ -220,10 +248,25 @@ class TestCommModel:
         # one (1, 258) fp32 row ppermuted up and one down per sweep
         assert p.predicted_comm_bytes == 2 * 258 * 4
 
+    def test_lbm_local_plan_prices_directional_halo(self):
+        """Per-direction depth: only the 2x5 c_x != 0 directions cross an
+        X cut, one (5, 1, Y, Z) slab each way -- not 19 full planes."""
+        with api.plan_context(mesh={"data": 8}):
+            ps = api.plan_for("lbm.soa", (19, 4, 8, 8), jnp.float32,
+                              local=True)
+            pi = api.plan_for("lbm.ivjk", (19, 4, 8, 8), jnp.float32,
+                              local=True)
+        assert ps.predicted_comm_bytes == 2 * 5 * 8 * 8 * 4
+        assert pi.predicted_comm_bytes == ps.predicted_comm_bytes
+
     def test_unsharded_axes_price_zero(self):
         with api.plan_context(mesh={"data": 1, "model": 8}):
             p = api.plan_for("jacobi", (32, 258), jnp.float32, local=True)
+            pl = api.plan_for("lbm.soa", (19, 32, 8, 8), jnp.float32,
+                              local=True)
         assert p.predicted_comm_bytes == 0
+        assert pl.predicted_comm_bytes == 0
+        assert p.predicted_exposed_comm_bytes == 0
 
     def test_global_plans_price_zero(self):
         """A global plan describes the single-device direct path."""
@@ -237,11 +280,45 @@ class TestCommModel:
             p = api.plan_for("rmsnorm", (64, 129), jnp.float32, local=True)
         assert p.predicted_comm_bytes == 0
 
+    def test_exposed_comm_partial_overlap(self):
+        """Halo families subtract the interior hiding window: a thin
+        jacobi stripe hides part of its two-row halo, the rest stays on
+        the critical path."""
+        from repro.core import planner
+
+        with api.plan_context(mesh={"data": 8}):
+            p = api.plan_for("jacobi", (8, 258), jnp.float32, local=True)
+        total = 2 * 258 * 4
+        assert p.predicted_comm_bytes == total
+        # window = 2 streams x 6 interior rows x 258 cols x 4 B, hidden at
+        # the ICI/HBM bandwidth ratio, never more than the total
+        window = 2 * 6 * 258 * 4
+        hidden = min(total, int(window * planner._ICI_BW / planner._HBM_BW))
+        assert p.predicted_exposed_comm_bytes == total - hidden
+        assert 0 < p.predicted_exposed_comm_bytes < total
+
+    def test_exposed_comm_fully_hidden(self):
+        """A tall stripe's interior window covers the whole halo: nothing
+        stays exposed."""
+        with api.plan_context(mesh={"data": 2}):
+            p = api.plan_for("jacobi", (32, 258), jnp.float32, local=True)
+        assert p.predicted_comm_bytes == 2 * 258 * 4
+        assert p.predicted_exposed_comm_bytes == 0
+
+    def test_exposed_comm_no_halo_model_is_fully_exposed(self):
+        """Families without a HALO_MODEL entry (xent's lse combine has no
+        interior stripe to hide behind) expose every wire byte."""
+        with api.plan_context(mesh={"data": 2, "model": 4}):
+            p = api.plan_for("xent", (32, 512), jnp.float32, local=True)
+        assert p.predicted_comm_bytes > 0
+        assert p.predicted_exposed_comm_bytes == p.predicted_comm_bytes
+
     def test_explain_reports_comm(self):
         with api.plan_context(mesh={"data": 2, "model": 4}):
             p = api.plan_for("xent", (32, 512), jnp.float32, local=True)
         txt = p.explain()
         assert f"comm {p.predicted_comm_bytes}B" in txt
+        assert f"exposed {p.predicted_exposed_comm_bytes}B" in txt
         assert "local shard plan" in txt
 
 
@@ -344,8 +421,9 @@ class TestSpmdForward:
                                                       s=3.0)),
                                    rtol=1e-6, atol=1e-6)
 
-    def test_lbm_replicated_still_correct(self):
-        """LBM keeps the replicated declaration: same result, one path."""
+    def test_lbm_sharded_launch_matches_ref(self):
+        """LBM through the sharded halo-exchange path (or its divisibility
+        fallback, mesh-dependent) still matches the jnp reference."""
         mesh = env_mesh()
         from repro.kernels.lbm import ops as lops
 
@@ -566,14 +644,36 @@ class TestCommValidation:
     """measure/validate --comm: the planner's predicted_comm_bytes vs the
     collective census of the lowered shard_map program."""
 
-    def test_both_families_within_envelope_on_env_mesh(self):
+    def test_all_families_within_envelope_on_env_mesh(self):
         from repro.measure import validate as validate_lib
 
         mesh = env_mesh()
         records = validate_lib.validate_comm(mesh)
-        assert {r["kernel"] for r in records} == {"jacobi", "xent"}
+        assert {r["kernel"] for r in records} == {
+            "jacobi", "xent", "lbm.soa", "lbm.ivjk"}
         for r in records:
             assert r["status"] == "ok", r
+
+    def test_exposed_records_within_envelope_on_env_mesh(self):
+        """validate --comm --exposed: one exposed_comm record per comm
+        kernel, every halo collective structured as overlappable, wire
+        bytes left on the critical path within the envelope."""
+        from repro.measure import validate as validate_lib
+
+        mesh = env_mesh()
+        records = validate_lib.validate_comm(mesh, exposed=True)
+        exposed = [r for r in records if r["check"] == "exposed_comm"]
+        assert {r["kernel"] for r in exposed} == {
+            "jacobi", "xent", "lbm.soa", "lbm.ivjk"}
+        for r in records:
+            assert r["status"] == "ok", r
+        for r in exposed:
+            assert r["structure_ok"], r
+            if r["kernel"] != "xent" and r["predicted"]["comm_bytes"]:
+                # halo families: every collective independent of the
+                # interior sweep
+                assert all(c["overlappable"]
+                           for c in r["measured"]["collectives"]), r
 
     def test_vocab_parallel_mesh_prices_lse_payload(self):
         from repro.measure import validate as validate_lib
@@ -590,6 +690,221 @@ class TestCommValidation:
         rec = validate_lib.validate_comm_kernel("jacobi", make_mesh(8, 1))
         assert rec["status"] == "ok", rec
         assert rec["predicted"]["comm_bytes"] == 2 * 258 * 4
+
+    def test_lbm_halo_mesh_prices_directional_slabs(self):
+        from repro.measure import validate as validate_lib
+
+        rec = validate_lib.validate_comm_kernel("lbm.soa", make_mesh(8, 1))
+        assert rec["status"] == "ok", rec
+        # two (5, 1, 8, 8) fp32 slabs per step
+        assert rec["predicted"]["comm_bytes"] == 2 * 5 * 8 * 8 * 4
+
+    def test_exposed_comm_event_streams(self):
+        """The exposed_comm ValidationEvent carries the record's numbers
+        (the obs half of validate --comm --exposed)."""
+        from repro import obs
+        from repro.measure import validate as validate_lib
+
+        ring = obs.RingBufferSink()
+        with obs.session(ring):
+            rec = validate_lib.validate_exposed_kernel(
+                "jacobi", make_mesh(8, 1))
+        (ev,) = ring.events("validation")
+        assert ev.kernel == "jacobi"
+        assert ev.check == "exposed_comm"
+        assert ev.predicted_bytes == float(
+            rec["predicted"]["exposed_comm_bytes"])
+        assert ev.measured_bytes == float(
+            rec["measured"]["exposed_wire_bytes"])
+        assert ev.status == rec["status"] == "ok"
+
+
+@multidevice
+class TestOverlapStructure:
+    """api.spmd.overlap_report: the jaxpr-level classifier behind
+    validate --exposed.  The overlapped shard bodies keep their halo
+    collectives independent of the interior Pallas sweep; the PR-5
+    exchange-then-compute shape (kept as ``_spmd_jacobi_blocking``) is the
+    blocking counter-example."""
+
+    def test_overlapped_jacobi_collectives_are_overlappable(self):
+        mesh = make_mesh(8, 1)
+        src = jnp.zeros((64, 34), jnp.float32)
+        with api.plan_context(mesh=mesh):
+            rep = spmd.overlap_report(
+                lambda a: api.launch("jacobi", a), src)
+        assert rep.n_pallas_calls >= 1
+        assert len(rep.collectives) == 2            # one ppermute each way
+        assert rep.all_overlappable
+        for c in rep.collectives:
+            assert c.primitive == "ppermute"
+            assert c.result_bytes == 34 * 4         # one local row
+
+    def test_blocking_body_is_classified_blocking(self):
+        import dataclasses
+
+        from repro.kernels.jacobi import ops as jops
+
+        mesh = make_mesh(8, 1)
+        src = jnp.zeros((64, 34), jnp.float32)
+        entry = api.get_kernel("jacobi")
+        blocking = dataclasses.replace(
+            entry, spmd_body=jops._spmd_jacobi_blocking)
+        with api.plan_context(mesh=mesh):
+            rep = spmd.overlap_report(
+                lambda a: spmd.spmd_launch(blocking, mesh, (a,), {}), src)
+        assert rep.n_pallas_calls >= 1
+        assert len(rep.collectives) == 2
+        assert not rep.all_overlappable
+        assert rep.n_overlappable == 0
+
+    def test_lbm_halo_slabs_are_overlappable_and_directional(self):
+        mesh = make_mesh(8, 1)
+        f = jnp.zeros((19, 32, 8, 8), jnp.float32)
+        for kernel in ("lbm.soa", "lbm.ivjk"):
+            with api.plan_context(mesh=mesh):
+                rep = spmd.overlap_report(
+                    lambda a: api.launch(kernel, a, omega=1.7), f)
+            assert rep.all_overlappable, kernel
+            assert len(rep.collectives) == 2, kernel
+            for c in rep.collectives:
+                # (5, 1, 8, 8) fp32: five directions, depth one -- the
+                # per-direction payload, not 19 full planes
+                assert c.result_bytes == 5 * 8 * 8 * 4
+
+    def test_xent_lse_combine_is_blocking(self):
+        """No interior stripe to hide behind: the lse combine collectives
+        stay on the critical path, matching the planner's fully-exposed
+        pricing for families without a HALO_MODEL entry."""
+        mesh = make_mesh(1, 8)
+        logits = jnp.zeros((64, 4096), jnp.float32)
+        labels = jnp.zeros((64,), jnp.int32)
+        with api.plan_context(mesh=mesh):
+            rep = spmd.overlap_report(
+                lambda lg, tg: api.launch("xent", lg, tg), logits, labels)
+        assert rep.collectives
+        assert rep.n_overlappable == 0
+
+
+@multidevice
+class TestHaloLbm:
+    """X-sharded LBM with per-direction ppermute halos: bit-exact vs the
+    single-device Pallas step at every shard cut (the overlap criterion),
+    periodic wrap included."""
+
+    @staticmethod
+    def _single_device(layout, f, omega, mask=None):
+        from repro.kernels.lbm import ops as lops
+
+        step = lops._step_soa if layout == "soa" else lops._step_ivjk
+        plan = api.plan_for(f"lbm.{layout}", tuple(f.shape), f.dtype)
+        return step(f, omega=omega, mask=mask, plan=plan)
+
+    @pytest.mark.parametrize("layout", ["soa", "ivjk"])
+    def test_pure_data_mesh_bit_exact(self, layout):
+        mesh = make_mesh(8, 1)
+        f = rnd((19, 32, 8, 8), 0)
+        clear_plan_cache()
+        with api.plan_context(mesh=mesh):
+            got = api.launch(f"lbm.{layout}", f, omega=1.7)
+        want = self._single_device(layout, f, 1.7)
+        assert jnp.array_equal(got, want), (
+            f"lbm.{layout} sharded step differs from single-device")
+        # the shard body planned its local *interior* slab (XL=4 stripe
+        # minus the two boundary planes), not the full lattice
+        assert any(k[1] == (19, 2, 8, 8)
+                   for k in local_keys(f"lbm.{layout}")), (
+            local_keys(f"lbm.{layout}"))
+        assert not any(k[1] == (19, 32, 8, 8)
+                       for k in local_keys(f"lbm.{layout}"))
+
+    @pytest.mark.parametrize("layout", ["soa", "ivjk"])
+    def test_env_mesh_bit_exact(self, layout):
+        mesh = env_mesh()
+        f = rnd((19, 32, 8, 8), 1)
+        with api.plan_context(mesh=mesh):
+            got = api.launch(f"lbm.{layout}", f, omega=1.2)
+        want = self._single_device(layout, f, 1.2)
+        assert jnp.array_equal(got, want)
+
+    def test_degenerate_two_plane_shards_bit_exact(self):
+        """XL == 2: every plane is a boundary plane, nothing interior."""
+        mesh = make_mesh(8, 1)
+        f = rnd((19, 16, 4, 4), 2)
+        with api.plan_context(mesh=mesh):
+            got = api.launch("lbm.soa", f, omega=1.7)
+        want = self._single_device("soa", f, 1.7)
+        assert jnp.array_equal(got, want)
+
+    def test_masked_launch_bit_exact(self):
+        """The obstacle mask is a replicated scalar operand: each shard
+        slices its own X window, masked sites keep pre-collision values."""
+        mesh = make_mesh(8, 1)
+        f = rnd((19, 32, 8, 8), 3)
+        mask = jax.random.bernoulli(
+            jax.random.PRNGKey(4), 0.7, (32, 8, 8))
+        with api.plan_context(mesh=mesh):
+            got = api.launch("lbm.soa", f, omega=1.7, mask=mask)
+        want = self._single_device("soa", f, 1.7, mask=mask)
+        assert jnp.array_equal(got, want)
+
+    def test_periodic_wrap_crosses_domain_edge(self):
+        """Pull-scheme streaming is periodic: shard 0's low halo is the
+        *last* shard's high boundary (unlike jacobi's zero edges).  A
+        lattice with a marked plane at x=31 must land at x=0 after one
+        step in the +x directions."""
+        from repro.kernels.lbm import ops as lops
+        from repro.kernels.lbm import ref as lref
+
+        mesh = make_mesh(8, 1)
+        # uniform rest equilibrium (density 1) so collide stays finite,
+        # plus a marked +x plane at the domain's last X slice
+        w = jnp.asarray(np.asarray(lref.W, dtype=np.float32))
+        f = jnp.broadcast_to(w[:, None, None, None],
+                             (19, 32, 8, 8)).astype(jnp.float32)
+        v = lops._PLUS_X[0]
+        f = f.at[v, 31].add(1.0)
+        with api.plan_context(mesh=mesh):
+            got = api.launch("lbm.soa", f, omega=0.0)  # pure streaming
+        want = self._single_device("soa", f, 0.0)
+        assert jnp.array_equal(got, want)
+        # with omega=0 post == fprop, so the marked plane must have
+        # wrapped from x=31 to x=0 (the +1 rides on the w[v] background)
+        assert float(jnp.max(jnp.asarray(got)[v, 0])) > float(w[v]) + 0.5
+
+
+@multidevice
+class TestOverlappedJacobiParity:
+    """The overlapped jacobi body is bit-exact vs the PR-5
+    exchange-then-compute body (ISSUE 9 acceptance criterion)."""
+
+    @staticmethod
+    def _blocking_entry():
+        import dataclasses
+
+        from repro.kernels.jacobi import ops as jops
+
+        return dataclasses.replace(
+            api.get_kernel("jacobi"), spmd_body=jops._spmd_jacobi_blocking)
+
+    @pytest.mark.parametrize("shape", [(64, 34), (16, 130), (8, 34)])
+    def test_overlapped_matches_blocking_all_cuts(self, shape):
+        mesh = make_mesh(8, 1)
+        g = rnd(shape, 5)
+        entry = self._blocking_entry()
+        with api.plan_context(mesh=mesh):
+            overlapped = api.launch("jacobi", g)
+            blocking = spmd.spmd_launch(entry, mesh, (g,), {})
+        assert jnp.array_equal(overlapped, blocking), shape
+
+    def test_overlapped_matches_blocking_env_mesh(self):
+        mesh = env_mesh()
+        g = rnd((64, 34), 6)
+        entry = self._blocking_entry()
+        with api.plan_context(mesh=mesh):
+            overlapped = api.launch("jacobi", g)
+            blocking = spmd.spmd_launch(entry, mesh, (g,), {})
+        assert jnp.array_equal(overlapped, blocking)
 
 
 @multidevice
