@@ -26,7 +26,16 @@ OBS_OUT="${TIER1_OBS_OUT:-$(mktemp "${TMPDIR:-/tmp}/tier1_obs.XXXXXX")}"
 python scripts/obs_smoke.py "$OBS_OUT"
 python -m repro.obs.report "$OBS_OUT"
 echo "tier1: obs event stream at $OBS_OUT"
-# Stage 4: static analysis -- the layout-hazard/declaration linter over
+# Stage 4: chaos smoke -- one deterministic fault storm (transient step
+# failure + torn checkpoint write + device loss) through the elastic
+# runtime on fake devices (docs/ELASTIC.md): re-mesh, restore, resume
+# with exact loss parity, event stream aggregated by the report CLI.
+# Set TIER1_CHAOS_OUT to pin a path (the CI chaos job uploads it).
+CHAOS_OUT="${TIER1_CHAOS_OUT:-$(mktemp "${TMPDIR:-/tmp}/tier1_chaos.XXXXXX")}"
+python scripts/chaos_smoke.py "$CHAOS_OUT"
+python -m repro.obs.report "$CHAOS_OUT" --fail-on-validation
+echo "tier1: chaos event stream at $CHAOS_OUT"
+# Stage 5: static analysis -- the layout-hazard/declaration linter over
 # the shipped registry vs the committed baseline (docs/ANALYZE.md), plus
 # ruff when the environment has it (CI always does; the dev container may
 # not, and the analyzer is the part that guards the planner invariants).
@@ -36,17 +45,17 @@ if command -v ruff >/dev/null 2>&1; then
 else
   echo "tier1: ruff not installed, skipping lint (CI runs it)"
 fi
-# Stage 5: docs check -- every repro.* reference, CLI flag, and fenced
+# Stage 6: docs check -- every repro.* reference, CLI flag, and fenced
 # python snippet in docs/*.md verified against the tree (the docs are a
 # checked artifact; scripts/check_docs.py, CI job docs-check).
 python scripts/check_docs.py
-# Stage 6: serving load-generator smoke -- a tiny offered-load point on
+# Stage 7: serving load-generator smoke -- a tiny offered-load point on
 # the paged batcher (docs/SERVING.md), end to end through the CLI.  Keeps
 # the benchmark runnable and the paged/chunked scheduler importable even
 # when the slow serving matrix is deselected below.
 python benchmarks/serving_load.py --loads 0.3 --ticks 6 --slots 2 \
   --max-len 16 >/dev/null
 echo "tier1: serving load-generator smoke ok"
-# Stage 7: fast test matrix (full sweeps carry the `sweep` marker and run
+# Stage 8: fast test matrix (full sweeps carry the `sweep` marker and run
 # out-of-band: pytest -m sweep).
 exec python -m pytest -q -m "not slow and not sweep" "$@"

@@ -48,15 +48,25 @@ class CheckpointManager:
         self.keep = keep
         self.async_write = async_write
         self._thread: threading.Thread | None = None
+        # A failure on the async writer thread is captured here and
+        # re-raised from the next wait()/save() on the caller thread --
+        # a checkpoint silently lost to a daemon-thread exception would
+        # only surface as an unexplainably old restore much later.
+        self._error: BaseException | None = None
+        # Chaos hook (runtime/faults.py): called inside _write after the
+        # tmp dir is populated but before the atomic rename, so a raising
+        # hook leaves exactly the torn state a mid-write crash would.
+        self.fault_hook = None
         os.makedirs(directory, exist_ok=True)
 
     # ------------------------------------------------------------------
     def save(self, step: int, state: Any, *, meta: dict | None = None) -> None:
         flat = _flatten(state)  # device_get happens on the caller thread
         if self.async_write:
-            self.wait()
+            self.wait()  # raises if the previous async write failed
             self._thread = threading.Thread(
-                target=self._write, args=(step, flat, meta or {}), daemon=True
+                target=self._write_async, args=(step, flat, meta or {}),
+                daemon=True,
             )
             self._thread.start()
         else:
@@ -66,6 +76,19 @@ class CheckpointManager:
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise RuntimeError(
+                f"async checkpoint write failed: {err!r} (the step was "
+                f"never completed; its torn tmp dir is invisible to "
+                f"restore)"
+            ) from err
+
+    def _write_async(self, step: int, flat: dict, meta: dict) -> None:
+        try:
+            self._write(step, flat, meta)
+        except BaseException as e:  # noqa: BLE001 -- re-raised from wait()
+            self._error = e
 
     def _write(self, step: int, flat: dict, meta: dict) -> None:
         proc = jax.process_index()
@@ -75,6 +98,8 @@ class CheckpointManager:
         np.savez(os.path.join(tmp, f"shard_{proc}.npz"), **flat)
         with open(os.path.join(tmp, "meta.json"), "w") as f:
             json.dump({"step": step, **meta}, f)
+        if self.fault_hook is not None:
+            self.fault_hook(step, tmp)
         if os.path.isdir(final):
             shutil.rmtree(final)
         os.rename(tmp, final)

@@ -562,6 +562,26 @@ def clear_plan_cache() -> None:
         _STATS["hits"] = _STATS["misses"] = 0
 
 
+def invalidate_mesh_plans(mesh) -> int:
+    """Drop every memoized plan keyed to ``mesh``; returns the count.
+
+    The elastic runtime calls this on a topology change: plans derived
+    under the old mesh (global shard-aligned padding *and* per-shard
+    ``local=True`` cells) describe a machine that no longer exists, and a
+    stale cell silently re-used after a re-mesh is exactly the "fixed
+    layout on an asymmetric machine" hazard the paper warns about.  Plans
+    for other meshes (and the mesh-free single-device cells) survive.
+    """
+    if mesh is None:
+        return 0
+    mesh_key = _mesh_key(mesh)
+    with _LOCK:
+        stale = [k for k in _CACHE if k[3] == mesh_key]
+        for k in stale:
+            del _CACHE[k]
+        return len(stale)
+
+
 def stream_stride_facts(
     plan: KernelPlan,
     model: InterleavedMemoryModel | None = None,

@@ -133,8 +133,13 @@ def main() -> None:
     if args.obs_jsonl:
         logging.info("obs event stream at %s (summarize: python -m "
                      "repro.obs.report %s)", args.obs_jsonl, args.obs_jsonl)
-    print(f"done: {len(metrics)} steps, "
-          f"loss {metrics[0]['loss']:.3f} -> {metrics[-1]['loss']:.3f}")
+    if metrics:
+        print(f"done: {len(metrics)} steps, "
+              f"loss {metrics[0]['loss']:.3f} -> {metrics[-1]['loss']:.3f}")
+    else:
+        # A complete checkpoint at >= --steps restores past the whole run.
+        print(f"done: 0 steps (checkpoint in {args.ckpt_dir} already at "
+              f"step >= {args.steps}; clear it or raise --steps)")
 
 
 if __name__ == "__main__":

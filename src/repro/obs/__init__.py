@@ -30,12 +30,15 @@ from repro.obs.events import (
     AdmissionEvent,
     BatcherTickEvent,
     CheckpointEvent,
+    DegradedEvent,
     Event,
+    MeshChangeEvent,
     PagePoolEvent,
     PlanEvent,
     PreemptionEvent,
     ProfileDriftEvent,
     RequestAbandonedEvent,
+    ResumeEvent,
     SpmdFallbackEvent,
     SpmdOverrideShadowEvent,
     TrainStepEvent,
@@ -57,5 +60,6 @@ __all__ = [
     "ValidationEvent", "TrainStepEvent", "CheckpointEvent",
     "AdmissionEvent", "BatcherTickEvent", "PagePoolEvent",
     "PreemptionEvent", "RequestAbandonedEvent", "ProfileDriftEvent",
+    "MeshChangeEvent", "ResumeEvent", "DegradedEvent",
     "EVENT_KINDS",
 ]

@@ -27,6 +27,14 @@ and a wall-clock timestamp.  The taxonomy mirrors the repo's existing
                                 request still queued or in flight.
   * ``ProfileDriftEvent``    -- a swept profile cell no longer reproduces
                                 its recorded geometry (planner drift).
+  * ``MeshChangeEvent``      -- the elastic runtime rebuilt the mesh after
+                                a topology change (device loss / gain).
+  * ``ResumeEvent``          -- the elastic runtime restored a checkpoint
+                                onto the (new) mesh and resumed training.
+  * ``DegradedEvent``        -- the system kept running in a degraded
+                                mode: a straggling step, a transient-step
+                                retry, retired surplus devices, or a
+                                serving page-pool shrink.
 
 Events serialize with :meth:`Event.to_record` -- a flat JSON-safe dict
 with ``kind`` and ``ts`` first -- which is exactly what ``JsonlSink``
@@ -54,6 +62,9 @@ __all__ = [
     "PreemptionEvent",
     "RequestAbandonedEvent",
     "ProfileDriftEvent",
+    "MeshChangeEvent",
+    "ResumeEvent",
+    "DegradedEvent",
     "EVENT_KINDS",
 ]
 
@@ -271,6 +282,65 @@ class ProfileDriftEvent(Event):
     detail: str
 
 
+@dataclasses.dataclass(frozen=True)
+class MeshChangeEvent(Event):
+    """The elastic runtime rebuilt the mesh after a topology change.
+
+    ``old_mesh``/``new_mesh`` are ``(axis, size)`` pairs; ``failed_ids``
+    are the devices reported lost, ``retired_ids`` the *surviving*
+    devices the new mesh could not use (surplus after preserving the TP
+    axis -- a partial TP group, or a remainder that does not divide).
+    ``step`` is the training step at which the change was observed."""
+
+    kind: ClassVar[str] = "mesh_change"
+
+    old_mesh: tuple
+    new_mesh: tuple
+    failed_ids: tuple = ()
+    retired_ids: tuple = ()
+    reason: str = "device_loss"
+    step: int = -1
+
+
+@dataclasses.dataclass(frozen=True)
+class ResumeEvent(Event):
+    """The elastic runtime resumed training on a (re-built) mesh.
+
+    ``step`` is the checkpoint step training resumes from (0 on a cold
+    start with no checkpoint); ``batch_chunks`` the per-DP-group batch
+    sizes after ``rebalance_batch``; ``invalidated_plans`` how many
+    plan-cache cells keyed to the old mesh were dropped;
+    ``spec_fallbacks`` the ``rules.spec_report`` reasons for any batch
+    dimension that fell back to replication on the new mesh."""
+
+    kind: ClassVar[str] = "resume"
+
+    step: int
+    mesh: tuple
+    batch_chunks: tuple = ()
+    invalidated_plans: int = 0
+    restored: bool = True
+    spec_fallbacks: tuple = ()
+
+
+@dataclasses.dataclass(frozen=True)
+class DegradedEvent(Event):
+    """The system kept running in a degraded mode instead of failing.
+
+    ``reason`` is one of "straggler" (a step exceeded the straggler
+    threshold over the step-time EMA), "transient_retry" (a step raised a
+    transient error and was retried with backoff), "surplus_devices"
+    (``surviving_mesh`` retired alive devices it could not place), or
+    "pool_shrink" (the serving page pool lost capacity and tenants were
+    re-admitted via preemption-by-replay)."""
+
+    kind: ClassVar[str] = "degraded"
+
+    reason: str
+    detail: str = ""
+    step: int = -1
+
+
 EVENT_KINDS: dict[str, type[Event]] = {
     cls.kind: cls
     for cls in (
@@ -286,5 +356,8 @@ EVENT_KINDS: dict[str, type[Event]] = {
         PreemptionEvent,
         RequestAbandonedEvent,
         ProfileDriftEvent,
+        MeshChangeEvent,
+        ResumeEvent,
+        DegradedEvent,
     )
 }

@@ -18,6 +18,10 @@ reports, per section:
     tile-pad slots as a fraction of the physical decode batch), plus the
     paged-KV signals: mean/peak page-pool utilization, preemptions (by
     reason), and requests abandoned at a run's tick budget;
+  * elastic -- mesh changes (with the surviving topology), elastic
+    resumes (restore step, re-chunked batch), and degraded-mode events
+    by reason (stragglers, transient retries, retired surplus devices,
+    serving pool shrinks);
   * profile drift -- swept cells the planner no longer reproduces.
 
 Sections with no events still print (zeroed), so the summary shape is
@@ -78,6 +82,9 @@ def aggregate(records: list[dict]) -> dict:
                "sum_page_util": 0.0, "peak_page_util": None,
                "preemptions": 0, "preempt_reasons": {},
                "abandoned": 0}
+    elastic = {"mesh_changes": 0, "last_mesh": None, "resumes": 0,
+               "last_resume_step": None, "invalidated_plans": 0,
+               "degraded": 0, "degraded_reasons": {}}
     drift = {"total": 0, "cells": []}
 
     for rec in records:
@@ -167,6 +174,19 @@ def aggregate(records: list[dict]) -> dict:
                 batcher["preempt_reasons"].get(reason, 0) + 1)
         elif kind == "request_abandoned":
             batcher["abandoned"] += 1
+        elif kind == "mesh_change":
+            elastic["mesh_changes"] += 1
+            elastic["last_mesh"] = _mesh_str(rec.get("new_mesh", ()))
+        elif kind == "resume":
+            elastic["resumes"] += 1
+            elastic["last_resume_step"] = rec.get("step")
+            elastic["invalidated_plans"] += int(
+                rec.get("invalidated_plans", 0))
+        elif kind == "degraded":
+            elastic["degraded"] += 1
+            reason = rec.get("reason", "?")
+            elastic["degraded_reasons"][reason] = (
+                elastic["degraded_reasons"].get(reason, 0) + 1)
         elif kind == "profile_drift":
             drift["total"] += 1
             cell = rec.get("cell", "?")
@@ -191,6 +211,7 @@ def aggregate(records: list[dict]) -> dict:
         "validation": validation,
         "train": train,
         "batcher": batcher,
+        "elastic": elastic,
         "profile_drift": drift,
     }
 
@@ -258,6 +279,19 @@ def render(summary: dict) -> str:
         + f", {ba['preemptions']} preemption(s)"
         + (f" ({reasons})" if reasons else "")
         + f", {ba['abandoned']} abandoned request(s)")
+
+    el = summary["elastic"]
+    reasons = "; ".join(f"{r}: {n}" for r, n in
+                        sorted(el["degraded_reasons"].items()))
+    lines.append(
+        f"elastic: {el['mesh_changes']} mesh change(s)"
+        + (f" (now {el['last_mesh']})" if el["last_mesh"] else "")
+        + f", {el['resumes']} resume(s)"
+        + (f" (last from step {el['last_resume_step']}, "
+           f"{el['invalidated_plans']} plan(s) invalidated)"
+           if el["last_resume_step"] is not None else "")
+        + f", {el['degraded']} degraded event(s)"
+        + (f" ({reasons})" if reasons else ""))
 
     dr = summary["profile_drift"]
     lines.append(f"profile drift: {dr['total']}"

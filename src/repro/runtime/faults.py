@@ -1,0 +1,187 @@
+"""Deterministic fault injection: the enabling half of elastic SPMD.
+
+A production run meets four failure shapes the paper's static layouts
+never had to: a device (and the memory controllers behind it) disappears
+mid-run, a shard goes slow without dying, the checkpoint writer crashes
+mid-write, and a step throws once and never again.  This module makes
+all four *injectable on a chosen step* so the recovery machinery --
+the trainer's backoff/restore loop, ``ElasticRunner``'s re-mesh path,
+``CheckpointManager``'s torn-write atomicity, and the serving batcher's
+pool-shrink degradation -- is exercised deterministically in tests and
+the CI chaos job instead of waiting for production to exercise it.
+
+Every fault is a frozen dataclass pinned to a step (or serving tick);
+a :class:`FaultPlan` is an ordered collection of them and
+:meth:`FaultPlan.injector` builds the stateful one-shot
+:class:`FaultInjector` the trainer consumes as its ``fail_injector``
+and the batcher consumes via :meth:`FaultInjector.tick`.  Nothing here
+is random: the same plan replays the same faults, which is what makes
+the chaos parity test (resumed run == uninterrupted run) assertable.
+
+Failure taxonomy (consumed by ``runtime.trainer``):
+
+  * :class:`TransientStepError` -- retryable; the trainer restores and
+    replays with exponential backoff.
+  * :class:`DeviceLossError`    -- *persistent*: the topology changed and
+    no amount of retrying brings the device back.  The trainer re-raises
+    it immediately; ``ElasticRunner`` catches it, shrinks the mesh, and
+    resumes from the newest complete checkpoint.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+
+class TransientStepError(RuntimeError):
+    """A step failure expected to clear on retry (preemption, flaky I/O,
+    a transient collective timeout).  The trainer's retry loop handles it
+    with restore + exponential backoff."""
+
+
+class DeviceLossError(RuntimeError):
+    """A persistent topology change: ``failed_ids`` devices are gone.
+
+    Retrying the step cannot succeed -- the trainer propagates this
+    immediately so the elastic runtime can re-mesh and resume."""
+
+    def __init__(self, failed_ids, *, step: int = -1):
+        self.failed_ids = frozenset(int(i) for i in failed_ids)
+        self.step = step
+        ids = sorted(self.failed_ids)
+        super().__init__(f"device(s) {ids} lost at step {step}")
+
+
+# ---------------------------------------------------------------------------
+# fault specs
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class DeviceLoss:
+    """Lose ``failed_ids`` at ``step`` (raises :class:`DeviceLossError`)."""
+
+    step: int
+    failed_ids: tuple[int, ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class Straggler:
+    """Delay step ``step`` by ``delay_s`` (a slow shard, not a dead one).
+
+    The trainer's straggler detector treats the blown step time as a
+    first-class degradation (``DegradedEvent(reason="straggler")``)
+    rather than silently waiting it out."""
+
+    step: int
+    delay_s: float
+    shard: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class CheckpointCrash:
+    """Crash the checkpoint writer for the first save at/after ``step``:
+    the tmp directory is populated but never renamed, leaving exactly the
+    torn state a mid-write crash would.  Restore never sees it; the
+    captured error re-raises from the manager's next ``wait()``/``save()``."""
+
+    step: int
+
+
+@dataclasses.dataclass(frozen=True)
+class Transient:
+    """Raise :class:`TransientStepError` on ``step``, ``times`` times."""
+
+    step: int
+    times: int = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class PoolShrink:
+    """Shrink the serving batcher's live page pool to ``live_pages`` at
+    serving tick ``tick`` (consumed via :meth:`FaultInjector.tick`)."""
+
+    tick: int
+    live_pages: int
+
+
+Fault = DeviceLoss | Straggler | CheckpointCrash | Transient | PoolShrink
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """An ordered, deterministic set of faults to inject into one run."""
+
+    faults: tuple[Fault, ...] = ()
+
+    def __post_init__(self):
+        object.__setattr__(self, "faults", tuple(self.faults))
+
+    def injector(self) -> "FaultInjector":
+        """A fresh stateful injector for one run of this plan."""
+        return FaultInjector(self)
+
+
+class FaultInjector:
+    """One run's fault state: each fault fires once (``Transient`` up to
+    its ``times``), then disarms -- a replayed step after a restore must
+    not re-trip the fault that killed it, or no run ever finishes.
+
+    Use as the trainer's ``fail_injector`` (called per step), attach to a
+    :class:`~repro.checkpoint.manager.CheckpointManager` for torn-write
+    faults, and call :meth:`tick` from a serving driver for pool faults.
+    """
+
+    def __init__(self, plan: FaultPlan):
+        self.plan = plan
+        self._fired: dict[int, int] = {}       # fault index -> fire count
+        self.log: list[tuple[str, int]] = []   # (kind, step/tick) fired
+
+    def _arm(self, idx: int, limit: int = 1) -> bool:
+        n = self._fired.get(idx, 0)
+        if n >= limit:
+            return False
+        self._fired[idx] = n + 1
+        return True
+
+    # ---- trainer-side ----------------------------------------------------
+    def __call__(self, step: int) -> None:
+        for idx, f in enumerate(self.plan.faults):
+            if isinstance(f, Straggler) and f.step == step and self._arm(idx):
+                self.log.append(("straggler", step))
+                time.sleep(f.delay_s)
+            elif isinstance(f, Transient) and f.step == step and self._arm(
+                    idx, f.times):
+                self.log.append(("transient", step))
+                raise TransientStepError(
+                    f"injected transient failure at step {step} "
+                    f"({self._fired[idx]}/{f.times})")
+            elif isinstance(f, DeviceLoss) and f.step == step and self._arm(
+                    idx):
+                self.log.append(("device_loss", step))
+                raise DeviceLossError(f.failed_ids, step=step)
+
+    def attach_checkpoint(self, manager) -> None:
+        """Install the torn-write hook on ``manager`` for any
+        :class:`CheckpointCrash` faults in the plan (no-op otherwise)."""
+        crashes = [(i, f) for i, f in enumerate(self.plan.faults)
+                   if isinstance(f, CheckpointCrash)]
+        if not crashes:
+            return
+
+        def hook(step: int, tmp: str) -> None:
+            for idx, f in crashes:
+                if step >= f.step and self._arm(idx):
+                    self.log.append(("checkpoint_crash", step))
+                    raise OSError(
+                        f"injected checkpoint-writer crash at step {step} "
+                        f"(torn tmp dir left at {tmp})")
+
+        manager.fault_hook = hook
+
+    # ---- serving-side ----------------------------------------------------
+    def tick(self, batcher, tick: int) -> None:
+        """Apply any :class:`PoolShrink` fault due at serving ``tick``."""
+        for idx, f in enumerate(self.plan.faults):
+            if isinstance(f, PoolShrink) and f.tick == tick and self._arm(
+                    idx):
+                self.log.append(("pool_shrink", tick))
+                batcher.shrink_pool(f.live_pages)

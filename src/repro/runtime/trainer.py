@@ -1,9 +1,16 @@
 """Fault-tolerant training loop.
 
-Checkpoints every ``ckpt_every`` steps (async, atomic); any exception in a
-step restores the latest checkpoint and replays from its step (the data
-pipeline is a pure function of step, so replay is exact).  ``fail_injector``
-lets tests simulate node failures at chosen steps.
+Checkpoints every ``ckpt_every`` steps (async, atomic); a *transient*
+exception in a step restores the latest checkpoint and replays from its
+step with exponential backoff (the data pipeline is a pure function of
+step, so replay is exact), while a *persistent* failure -- a
+``DeviceLossError`` from ``runtime.faults``, i.e. a topology change --
+propagates immediately so the elastic runtime (``runtime.elastic
+.ElasticRunner``) can re-mesh and resume instead of retrying a step that
+can never succeed.  ``fail_injector`` lets tests and the chaos harness
+inject failures at chosen steps; steps whose wall time blows past the
+straggler threshold over the step-time EMA are reported as first-class
+degradations on the obs bus rather than silently waited out.
 """
 from __future__ import annotations
 
@@ -20,6 +27,7 @@ from repro.checkpoint.manager import CheckpointManager
 from repro.data.pipeline import DataConfig, make_batch
 from repro.optim import adamw
 from repro.parallel import steps as steps_lib
+from repro.runtime.faults import DeviceLossError
 
 log = logging.getLogger("repro.trainer")
 
@@ -31,6 +39,15 @@ class TrainerConfig:
     ckpt_dir: str = "/tmp/repro_ckpt"
     max_retries: int = 3
     log_every: int = 1
+    # Exponential backoff between transient-failure retries:
+    # base * 2**(retry-1), capped.  The default base is small enough to be
+    # invisible in tests while still separating retry storms in real runs.
+    backoff_base_s: float = 0.05
+    backoff_max_s: float = 5.0
+    # A step slower than straggler_factor x the step-time EMA is reported
+    # as a DegradedEvent("straggler") once history exists (>= 3 steps).
+    # 0 disables detection.
+    straggler_factor: float = 4.0
 
 
 class Trainer:
@@ -92,11 +109,35 @@ class Trainer:
         with api.plan_context(mesh=self._plan_mesh()):
             return self._train(key, fail_injector=fail_injector)
 
+    def _note_straggler(self, step: int, step_s: float, ema: float | None,
+                        n_hist: int) -> None:
+        factor = self.tcfg.straggler_factor
+        if factor <= 0 or ema is None or n_hist < 3:
+            return
+        if step_s > factor * ema:
+            log.warning("step %d straggled: %.3fs vs EMA %.3fs (x%.1f)",
+                        step, step_s, ema, step_s / ema)
+            if obs.enabled():
+                obs.emit(obs.DegradedEvent(
+                    reason="straggler", step=step,
+                    detail=f"step {step_s:.3f}s vs ema {ema:.3f}s "
+                           f"(threshold x{factor:g})"))
+
+    def _backoff(self, retries: int) -> None:
+        base = self.tcfg.backoff_base_s
+        if base <= 0:
+            return
+        delay = min(base * 2 ** (retries - 1), self.tcfg.backoff_max_s)
+        log.info("backing off %.2fs before retry %d", delay, retries)
+        time.sleep(delay)
+
     def _train(self, key, *, fail_injector: Callable[[int], None] | None = None
                ) -> list[dict]:
         self.plan_hot_kernels()
         step, state = self.init_or_restore(key)
         retries = 0
+        ema: float | None = None
+        n_hist = 0
         while step < self.tcfg.n_steps:
             try:
                 if fail_injector is not None:
@@ -113,6 +154,9 @@ class Trainer:
                 # existing callers (launch/train.py, tests) see the same
                 # list-of-dicts they always did.
                 step_s = time.perf_counter() - t0
+                self._note_straggler(step, step_s, ema, n_hist)
+                ema = step_s if ema is None else 0.7 * ema + 0.3 * step_s
+                n_hist += 1
                 self.metrics.append({"step": step, "loss": loss,
                                      "grad_norm": grad_norm})
                 if obs.enabled():
@@ -128,11 +172,23 @@ class Trainer:
                     if obs.enabled():
                         obs.emit(obs.CheckpointEvent(step=step,
                                                      action="save"))
+            except DeviceLossError:
+                # Persistent: the topology changed.  Retrying cannot bring
+                # the device back -- propagate so the elastic runtime can
+                # re-mesh, restore, and resume (runtime/elastic.py).
+                raise
             except Exception as e:  # noqa: BLE001 -- the whole point
                 retries += 1
                 if retries > self.tcfg.max_retries:
                     raise
-                log.warning("step %d failed (%s); restoring", step, e)
+                log.warning("step %d failed (%s); restoring (retry %d/%d)",
+                            step, e, retries, self.tcfg.max_retries)
+                if obs.enabled():
+                    obs.emit(obs.DegradedEvent(
+                        reason="transient_retry", step=step,
+                        detail=f"{type(e).__name__}: {e} "
+                               f"(retry {retries}/{self.tcfg.max_retries})"))
+                self._backoff(retries)
                 restored = self.ckpt.restore_latest(state)
                 if restored is not None:
                     step, state = restored

@@ -88,6 +88,10 @@ class PageManager:
         self.geometry = geometry
         self._free: deque[int] = deque(geometry.alloc_order())
         self._slot_pages: list[list[int]] = [[] for _ in range(n_slots)]
+        # Pages withdrawn from service by shrink() -- capacity loss (a host
+        # behind the pool went away) modelled without re-allocating the
+        # device pool.  Never handed out again.
+        self._retired: list[int] = []
 
     # ---- accounting ------------------------------------------------------
     @property
@@ -95,8 +99,27 @@ class PageManager:
         return len(self._free)
 
     @property
+    def live_pages(self) -> int:
+        """Allocatable pages: the geometry's live pool minus any retired by
+        :meth:`shrink`.  Admission/backpressure arithmetic must use this,
+        not ``geometry.live_pages``, or a shrunken pool over-admits."""
+        return self.geometry.live_pages - len(self._retired)
+
+    @property
     def used_pages(self) -> int:
-        return self.geometry.live_pages - len(self._free)
+        return self.live_pages - len(self._free)
+
+    # ---- capacity loss ---------------------------------------------------
+    def shrink(self, live_pages: int) -> int:
+        """Retire pages until at most ``live_pages`` remain in service,
+        taking them from the *free* pool only.  Returns the remaining
+        deficit: pages still to retire once the caller frees some (by
+        preempting tenants) and calls again.  Never touches a page a slot
+        currently holds."""
+        target = max(0, int(live_pages))
+        while self.live_pages > target and self._free:
+            self._retired.append(self._free.pop())
+        return max(0, self.live_pages - target)
 
     def slot_pages(self, slot: int) -> tuple[int, ...]:
         return tuple(self._slot_pages[slot])

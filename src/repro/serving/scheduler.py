@@ -36,6 +36,7 @@ preemption is invisible in the output stream.  See docs/SERVING.md.
 from __future__ import annotations
 
 import dataclasses
+import logging
 from collections import deque
 from typing import Iterable
 
@@ -48,6 +49,8 @@ from repro import obs
 from repro.models import params as params_lib
 from repro.parallel import steps as steps_lib
 from repro.serving.paged_cache import PageManager, plan_page_geometry
+
+log = logging.getLogger("repro.serving")
 
 
 @dataclasses.dataclass
@@ -323,15 +326,49 @@ class ContinuousBatcher:
         if self.pages is None:
             return True
         need = self.geometry.pages_for(min(req.replay_len + 1, self.max_len))
-        if need > self.geometry.live_pages:
+        if need > self.pages.live_pages:
             raise RuntimeError(
                 f"page pool too small: request {req.rid} needs {need} "
                 f"page(s) of {self.geometry.page_len} but the pool only "
-                f"has {self.geometry.live_pages} "
+                f"has {self.pages.live_pages} "
                 f"(n_pages={self.geometry.n_pages})")
         reserve = sum(r is not None and not r.prefilling
                       for r in self.slot_req)
         return need + reserve <= self.pages.free_pages
+
+    def shrink_pool(self, live_pages: int) -> int:
+        """Graceful degradation on capacity loss: shrink the allocatable
+        page pool to ``live_pages``, preempting tenants (decode included)
+        through the replay path until enough pages are free to retire --
+        the batcher keeps serving at reduced capacity instead of raising.
+        Returns how many tenants were preempted.  Chaos harness entry
+        point: ``runtime.faults.FaultInjector.tick`` calls this for
+        ``PoolShrink`` faults."""
+        if self.pages is None:
+            raise RuntimeError(
+                "shrink_pool requires kv_cache='paged' (a dense cache has "
+                "no page pool to shrink)")
+        before = self.pages.live_pages
+        preempted = 0
+        deficit = self.pages.shrink(live_pages)
+        while deficit > 0:
+            if not self._preempt_one(exclude=-1, allow_decode=True,
+                                     reason="pool_shrink"):
+                raise RuntimeError(
+                    f"cannot shrink page pool to {live_pages} live "
+                    f"page(s): {deficit} still to retire with no tenant "
+                    f"left to preempt")
+            preempted += 1
+            deficit = self.pages.shrink(live_pages)
+        log.warning("page pool shrunk %d -> %d live page(s); %d tenant(s) "
+                    "preempted to the replay queue", before,
+                    self.pages.live_pages, preempted)
+        if obs.enabled():
+            obs.emit(obs.DegradedEvent(
+                reason="pool_shrink",
+                detail=f"live pages {before} -> {self.pages.live_pages}, "
+                       f"{preempted} tenant(s) preempted for replay"))
+        return preempted
 
     def _admit(self) -> None:
         admitted = False
@@ -424,7 +461,7 @@ class ContinuousBatcher:
                 obs.emit(obs.PagePoolEvent(
                     tick=self.ticks, used_pages=self.pages.used_pages,
                     free_pages=self.pages.free_pages,
-                    live_pages=self.geometry.live_pages,
+                    live_pages=self.pages.live_pages,
                     page_len=self.geometry.page_len))
         for s, req in enumerate(self.slot_req):
             if req is None or not advance[s]:
@@ -449,7 +486,8 @@ class ContinuousBatcher:
         return bool(self.queue) or any(r is not None for r in self.slot_req)
 
     def run(self, reqs: Iterable[Request], *, max_ticks: int = 100_000,
-            on_truncation: str = "raise") -> dict[int, list[int]]:
+            on_truncation: str = "raise",
+            fault_injector=None) -> dict[int, list[int]]:
         """Drive submitted requests to completion (or ``max_ticks``).
 
         Hitting the tick budget with work in flight is never silent: the
@@ -457,13 +495,19 @@ class ContinuousBatcher:
         results and the abandoned requests); ``on_truncation='return'``
         returns the partial ``completed`` dict instead -- callers opting
         in can check ``self.busy``.  Either way every abandoned request
-        is reported on the obs bus."""
+        is reported on the obs bus.
+
+        ``fault_injector`` (a ``runtime.faults.FaultInjector``) is
+        consulted before each tick, so ``PoolShrink`` faults land at their
+        chosen tick via :meth:`shrink_pool`."""
         if on_truncation not in ("raise", "return"):
             raise ValueError(
                 f"on_truncation must be 'raise' or 'return', "
                 f"got {on_truncation!r}")
         self.submit(reqs)
         while self.busy and self.ticks < max_ticks:
+            if fault_injector is not None:
+                fault_injector.tick(self, self.ticks)
             self.step()
         if self.busy:
             abandoned = [r for r in self.slot_req if r is not None]

@@ -153,6 +153,109 @@ class TestDtypeAndRelayout:
             mgr.restore(1, {"w": jnp.zeros(2), "extra": jnp.zeros(1)})
 
 
+class TestAsyncFailureSurfacing:
+    """Satellite: a failure on the async writer thread must surface on the
+    caller thread -- a silently lost checkpoint only shows up much later
+    as an unexplainably old restore."""
+
+    def _failing_mgr(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), async_write=True)
+
+        def boom(step, tmp):
+            raise OSError(f"disk full writing step {step}")
+
+        mgr.fault_hook = boom
+        return mgr
+
+    def test_wait_reraises_writer_failure(self, tmp_path):
+        mgr = self._failing_mgr(tmp_path)
+        mgr.save(2, _state())
+        with pytest.raises(RuntimeError, match="async checkpoint write "
+                                               "failed"):
+            mgr.wait()
+        # The error is consumed: the manager is usable again.
+        mgr.fault_hook = None
+        mgr.save(4, _state())
+        mgr.wait()
+        assert mgr.all_steps() == [4]
+
+    def test_next_save_reraises_writer_failure(self, tmp_path):
+        mgr = self._failing_mgr(tmp_path)
+        mgr.save(2, _state())
+        with pytest.raises(RuntimeError, match="async checkpoint write"):
+            mgr.save(4, _state())
+
+    def test_restore_latest_reraises_writer_failure(self, tmp_path):
+        mgr = self._failing_mgr(tmp_path)
+        mgr.save(2, _state())
+        with pytest.raises(RuntimeError, match="async checkpoint write"):
+            mgr.restore_latest(_state())
+
+    def test_failed_write_leaves_no_visible_step(self, tmp_path):
+        mgr = self._failing_mgr(tmp_path)
+        mgr.save(2, _state())
+        with pytest.raises(RuntimeError):
+            mgr.wait()
+        assert mgr.all_steps() == []            # torn tmp is invisible
+        assert any(".tmp" in p.name for p in tmp_path.iterdir())
+
+    def test_sync_write_failure_raises_inline(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), async_write=False)
+
+        def boom(step, tmp):
+            raise OSError("no space")
+
+        mgr.fault_hook = boom
+        with pytest.raises(OSError):
+            mgr.save(2, _state())
+
+
+class TestRestoreAfterReshape:
+    """Satellite: the edge cases of the elastic resume path -- restoring
+    the newest *complete* checkpoint onto a differently shaped mesh."""
+
+    def test_torn_tmp_next_to_complete_older_step(self, tmp_path):
+        """A crash mid-write of step 6 leaves step_00000006.tmp0 on disk;
+        restore_latest must pick the complete step 4, not trip on the
+        torn directory."""
+        mgr = CheckpointManager(str(tmp_path), async_write=False)
+        mgr.save(4, _state(scale=4.0))
+        torn = tmp_path / "step_00000006.tmp0"
+        torn.mkdir()
+        np.savez(torn / "shard_0.npz", **{"params/w": np.zeros((3, 4))})
+        (torn / "meta.json").write_text('{"step": 6}')
+        assert mgr.all_steps() == [4]
+        step, tree = mgr.restore_latest(_state(scale=0.0))
+        assert step == 4
+        _assert_trees_equal(tree, _state(scale=4.0))
+
+    def test_restore_onto_different_dp_shape(self, tmp_path):
+        """A dp=4-sharded optimizer accumulator saved as (4, 8) restores
+        into a dp=2 layout's (2, 16) template: same payload, new
+        partitioning (restore adopts the template's shape)."""
+        mgr = CheckpointManager(str(tmp_path), async_write=False)
+        payload = np.arange(32, dtype=np.float32)
+        mgr.save(1, {"acc": jnp.asarray(payload.reshape(4, 8))})
+        got = mgr.restore(1, {"acc": jnp.zeros((2, 16), jnp.float32)})
+        assert got["acc"].shape == (2, 16)
+        np.testing.assert_array_equal(np.asarray(got["acc"]).ravel(),
+                                      payload)
+
+    def test_bf16_round_trip_through_resharded_restore(self, tmp_path):
+        """bf16 params widen to f32 on disk and re-cast to bf16 on
+        restore even when the template's shape changed -- the combined
+        dtype+shape path of an elastic resume."""
+        mgr = CheckpointManager(str(tmp_path), async_write=False)
+        vals = jnp.asarray(np.linspace(-2, 2, 24), jnp.bfloat16)
+        mgr.save(1, {"w": vals.reshape(4, 6)})
+        got = mgr.restore(1, {"w": jnp.zeros((2, 12), jnp.bfloat16)})
+        assert got["w"].dtype == jnp.bfloat16
+        assert got["w"].shape == (2, 12)
+        np.testing.assert_array_equal(
+            np.asarray(got["w"].ravel(), np.float32),
+            np.asarray(vals, np.float32))
+
+
 class TestTrainerResumePath:
     def test_init_or_restore_resumes_from_latest(self, tmp_path):
         """The trainer-side consumer: a state saved by one Trainer instance

@@ -1,0 +1,252 @@
+"""Elastic runtime: re-mesh on device loss, resume from checkpoint, parity.
+
+The acceptance criterion for the elastic tentpole is *chaos parity*: a
+run that loses devices at step k must resume on the shrunken mesh from
+the latest complete checkpoint and produce **exactly** the loss
+trajectory of an uninterrupted run on that same mesh -- no step lost, no
+step duplicated (the data pipeline is a pure function of step, and a
+dp-only shrink leaves the kernel plans' model-axis padding untouched, so
+equality is exact, not approximate).
+
+These tests run on one CPU device by using *placeholder* devices: the
+runner then plans against an ``{axis: size}`` planning mesh -- identical
+(dp, tp) arithmetic and plan-cache keying to a real ``jax.sharding
+.Mesh``, without multi-device execution.  The real-mesh variant rides in
+``tests/test_spmd_launch.py``'s multidevice job and the CI chaos job.
+"""
+from __future__ import annotations
+
+import logging
+from types import SimpleNamespace
+
+import jax
+import pytest
+
+from repro import api, obs
+from repro.core import planner
+from repro.obs import report
+from repro.runtime import elastic
+from repro.runtime.elastic import ElasticRunner
+from repro.runtime.faults import (
+    CheckpointCrash,
+    DeviceLoss,
+    DeviceLossError,
+    FaultPlan,
+    Straggler,
+    Transient,
+)
+
+
+def _fake_devices(n: int) -> list:
+    return [SimpleNamespace(id=i) for i in range(n)]
+
+
+def _make_factory(ckpt_dir: str, *, n_steps: int = 6, ckpt_every: int = 2,
+                  d_model: int = 64):
+    """Trainer factory for ElasticRunner: a fresh tiny Trainer planning
+    against the mesh the runner hands it."""
+    from repro.data.pipeline import DataConfig
+    from repro.models import build_model
+    from repro.models.config import ModelConfig
+    from repro.optim import adamw
+    from repro.optim.schedules import make_schedule
+    from repro.runtime.trainer import Trainer, TrainerConfig
+
+    cfg = ModelConfig(name="t", family="dense", n_layers=1, d_model=d_model,
+                      n_heads=2, n_kv_heads=2, d_ff=64, vocab_size=32,
+                      dtype="float32", remat=False)
+    model = build_model(cfg)
+
+    def make_trainer(mesh):
+        return Trainer(
+            model,
+            DataConfig(vocab_size=32, seq_len=16, global_batch=4,
+                       d_model=d_model),
+            adamw.AdamWConfig(master=False),
+            make_schedule("cosine", peak=3e-3, warmup=2, total=n_steps),
+            TrainerConfig(n_steps=n_steps, ckpt_every=ckpt_every,
+                          ckpt_dir=ckpt_dir, backoff_base_s=0.0),
+            mesh=mesh)
+
+    return make_trainer
+
+
+class TestSurvivingMesh:
+    def test_partial_tp_group_is_retired(self):
+        """7 survivors with tp=2 -> a 3x2 mesh: the odd device out is
+        retired (a partial TP group cannot hold a full weight shard)."""
+        n = jax.device_count()
+        plan = elastic.plan_mesh(7, tp=2)
+        assert plan.shape == (3, 2) and plan.n_devices == 6
+        if n >= 8:
+            mesh = elastic.surviving_mesh(jax.devices(), {7}, tp=2)
+            assert mesh.devices.shape == (3, 2)
+
+    def test_surplus_devices_logged_once_and_reported(self, caplog):
+        """Satellite: ``surviving_mesh`` used to silently drop survivors
+        that don't fill the grid.  Now the retired ids are logged once
+        and emitted as a DegradedEvent visible in the report."""
+        elastic._warned_retired.clear()
+        devices = _fake_devices(7)
+        ring = obs.RingBufferSink(capacity=100)
+        with caplog.at_level(logging.WARNING, logger="repro.elastic"):
+            with obs.session(ring):
+                r = ElasticRunner(lambda mesh: None, devices=devices, tp=2)
+                r._build_mesh()
+                r._build_mesh()     # same retirement: no second log line
+        warns = [m for m in caplog.messages if "retiring" in m]
+        assert len(warns) == 1
+        assert "[6]" in warns[0]
+        deg = ring.events("degraded")
+        assert [e.reason for e in deg] == ["surplus_devices"] * 2
+        assert "6" in deg[0].detail
+        summary = report.aggregate([e.to_record() for e in deg])
+        assert summary["elastic"]["degraded_reasons"] == {
+            "surplus_devices": 2}
+
+    def test_no_surplus_no_event(self):
+        elastic._warned_retired.clear()
+        ring = obs.RingBufferSink(capacity=100)
+        with obs.session(ring):
+            r = ElasticRunner(lambda mesh: None,
+                              devices=_fake_devices(8), tp=2)
+            r._build_mesh()
+        assert not ring.events("degraded")
+
+
+class TestPlanInvalidation:
+    def test_invalidate_mesh_plans_drops_only_that_mesh(self):
+        planner.clear_plan_cache()
+        old = {"data": 4, "model": 1}
+        new = {"data": 3, "model": 1}
+        with api.plan_context(mesh=old):
+            api.plan_for("rmsnorm", (64, 128), "float32")
+        with api.plan_context(mesh=new):
+            api.plan_for("rmsnorm", (64, 128), "float32")
+        assert planner.invalidate_mesh_plans(old) == 1
+        assert planner.invalidate_mesh_plans(old) == 0   # already gone
+        with api.plan_context(mesh=new):                  # survivor: hit
+            api.plan_for("rmsnorm", (64, 128), "float32")
+        assert planner.invalidate_mesh_plans(new) == 1
+
+    def test_invalidate_none_mesh_is_noop(self):
+        planner.clear_plan_cache()
+        api.plan_for("rmsnorm", (64, 128), "float32")     # mesh-free cell
+        assert planner.invalidate_mesh_plans(None) == 0
+        assert planner.plan_cache_info()["size"] == 1
+
+
+class TestChaosParity:
+    def test_device_loss_resumes_with_exact_parity(self, tmp_path):
+        """The acceptance test: lose a device at step 3 of 6, re-mesh
+        dp=4 -> dp=3, resume from the step-2 checkpoint, and match the
+        uninterrupted dp=3 run's loss trajectory *exactly* -- every step
+        present exactly once, with mesh-change and resume events on the
+        bus."""
+        key = jax.random.PRNGKey(0)
+        ring = obs.RingBufferSink(capacity=10_000)
+        with obs.session(ring):
+            r = ElasticRunner(_make_factory(str(tmp_path / "chaos")),
+                              devices=_fake_devices(4), tp=1)
+            chaos = r.run(key, fault_plan=FaultPlan(
+                (DeviceLoss(step=3, failed_ids=(3,)),)))
+        assert r.remeshes == 1
+        assert r.mesh == {"data": 3, "model": 1}
+        assert r.batch_chunks == [2, 1, 1]
+
+        base = ElasticRunner(_make_factory(str(tmp_path / "base")),
+                             devices=_fake_devices(3), tp=1).run(key)
+        # Exactly once per step, in order -- nothing lost, nothing
+        # duplicated.
+        assert [m["step"] for m in chaos] == list(range(6))
+        assert [m["step"] for m in base] == list(range(6))
+        # Replay is exact: bitwise-equal losses after the resume point
+        # (and everywhere -- a dp-only shrink does not change numerics).
+        for mc, mb in zip(chaos, base):
+            assert mc["loss"] == mb["loss"], (mc, mb)
+
+        changes = ring.events("mesh_change")
+        assert len(changes) == 1
+        assert changes[0].old_mesh == (("data", 4), ("model", 1))
+        assert changes[0].new_mesh == (("data", 3), ("model", 1))
+        assert changes[0].failed_ids == (3,) and changes[0].step == 3
+        resumes = ring.events("resume")
+        assert len(resumes) == 2                # initial start + re-mesh
+        assert resumes[0].restored is False and resumes[0].step == 0
+        assert resumes[1].restored is True and resumes[1].step == 2
+        assert resumes[1].batch_chunks == (2, 1, 1)
+        # The dead mesh's plan cells were invalidated.
+        assert resumes[1].invalidated_plans >= 1
+        # And the whole story is visible in the report.
+        summary = report.aggregate(
+            [e.to_record() for e in ring.events()])
+        el = summary["elastic"]
+        assert el["mesh_changes"] == 1
+        assert el["last_mesh"] == "data=3,model=1"
+        assert el["resumes"] == 2 and el["last_resume_step"] == 2
+        text = report.render(summary)
+        assert "elastic: 1 mesh change(s)" in text
+
+    def test_compound_fault_storm_still_converges(self, tmp_path):
+        """Transient + straggler + torn checkpoint + device loss in one
+        run: every recovery path composes and the metrics stay exactly
+        once per step."""
+        key = jax.random.PRNGKey(1)
+        r = ElasticRunner(_make_factory(str(tmp_path)),
+                          devices=_fake_devices(4), tp=1)
+        plan = FaultPlan((
+            Transient(step=1),
+            Straggler(step=2, delay_s=0.01),
+            CheckpointCrash(step=4),
+            DeviceLoss(step=3, failed_ids=(2,)),
+        ))
+        metrics = r.run(key, fault_plan=plan)
+        assert [m["step"] for m in metrics] == list(range(6))
+        assert r.remeshes == 1
+
+    def test_repeated_losses_shrink_until_exhausted(self, tmp_path):
+        key = jax.random.PRNGKey(2)
+        r = ElasticRunner(_make_factory(str(tmp_path)),
+                          devices=_fake_devices(3), tp=1, min_dp=1)
+        plan = FaultPlan((
+            DeviceLoss(step=2, failed_ids=(0,)),
+            DeviceLoss(step=4, failed_ids=(1,)),
+        ))
+        metrics = r.run(key, fault_plan=plan)
+        assert [m["step"] for m in metrics] == list(range(6))
+        assert r.remeshes == 2
+        assert r.mesh == {"data": 1, "model": 1}
+        # Losing the last device is not survivable: plan_mesh raises.
+        r2 = ElasticRunner(_make_factory(str(tmp_path / "dead")),
+                           devices=_fake_devices(1), tp=1)
+        with pytest.raises(DeviceLossError):
+            r2.run(key, fault_plan=FaultPlan(
+                (DeviceLoss(step=1, failed_ids=(0,)),)))
+
+    def test_max_remesh_caps_thrashing(self, tmp_path):
+        r = ElasticRunner(_make_factory(str(tmp_path)),
+                          devices=_fake_devices(4), tp=1, max_remesh=0)
+        with pytest.raises(DeviceLossError):
+            r.run(jax.random.PRNGKey(0), fault_plan=FaultPlan(
+                (DeviceLoss(step=2, failed_ids=(3,)),)))
+
+
+class TestRealMesh:
+    @pytest.mark.skipif(jax.device_count() < 8,
+                        reason="needs >= 8 devices "
+                               "(XLA_FLAGS=--xla_force_host_platform_"
+                               "device_count=8)")
+    def test_device_loss_on_real_mesh(self, tmp_path):
+        """CI chaos-job variant: real jax devices, real
+        ``jax.sharding.Mesh``, tp=2; losing one device retires its whole
+        TP group (dp=4 -> dp=3)."""
+        key = jax.random.PRNGKey(0)
+        r = ElasticRunner(_make_factory(str(tmp_path)),
+                          devices=jax.devices()[:8], tp=2)
+        metrics = r.run(key, fault_plan=FaultPlan(
+            (DeviceLoss(step=3, failed_ids=(5,)),)))
+        assert [m["step"] for m in metrics] == list(range(6))
+        assert isinstance(r.mesh, jax.sharding.Mesh)
+        assert dict(zip(r.mesh.axis_names, r.mesh.devices.shape)) == {
+            "data": 3, "model": 2}
+        assert 5 not in {d.id for d in r.mesh.devices.ravel()}

@@ -74,7 +74,8 @@ class TestEvents:
         kinds = {"plan", "spmd_fallback", "spmd_override_shadow",
                  "validation", "train_step", "checkpoint", "admission",
                  "batcher_tick", "page_pool", "preemption",
-                 "request_abandoned", "profile_drift"}
+                 "request_abandoned", "profile_drift",
+                 "mesh_change", "resume", "degraded"}
         assert set(events.EVENT_KINDS) == kinds
         for kind, cls in events.EVENT_KINDS.items():
             assert cls.kind == kind
@@ -602,6 +603,37 @@ class TestReport:
         assert val["lbm/exposed_comm"]["fails"] == 1
         assert val["lbm/exposed_comm"]["worst"] == pytest.approx(2.0)
         assert val["jacobi/comm"]["fails"] == 0
+
+    def test_elastic_section_aggregates(self):
+        """Mesh-change / resume / degraded events from the elastic runtime
+        land in the report's ``elastic`` section (satellite: a shrunken
+        mesh must be visible in ``repro.obs.report``)."""
+        evs = [
+            events.MeshChangeEvent(
+                old_mesh=(("data", 4), ("model", 2)),
+                new_mesh=(("data", 3), ("model", 2)),
+                failed_ids=(7,), retired_ids=(6,), step=12),
+            events.ResumeEvent(step=10, mesh=(("data", 3), ("model", 2)),
+                               batch_chunks=(2, 1, 1),
+                               invalidated_plans=5),
+            events.DegradedEvent(reason="straggler", step=3,
+                                 detail="step 2.0s vs ema 0.1s"),
+            events.DegradedEvent(reason="transient_retry", step=4),
+            events.DegradedEvent(reason="straggler", step=9),
+        ]
+        s = report.aggregate([e.to_record() for e in evs])
+        el = s["elastic"]
+        assert el["mesh_changes"] == 1
+        assert el["last_mesh"] == "data=3,model=2"
+        assert el["resumes"] == 1
+        assert el["last_resume_step"] == 10
+        assert el["invalidated_plans"] == 5
+        assert el["degraded"] == 3
+        assert el["degraded_reasons"] == {"straggler": 2,
+                                          "transient_retry": 1}
+        text = report.render(s)
+        assert "elastic: 1 mesh change(s)" in text
+        assert "data=3,model=2" in text
 
     def test_render_is_stable_when_empty(self):
         text = report.render(report.aggregate([]))

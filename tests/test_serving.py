@@ -185,6 +185,53 @@ def test_preemption_decode_priority_and_replay():
     assert got == want                          # replay is invisible
 
 
+def test_pool_shrink_degrades_gracefully():
+    """Chaos satellite: losing page capacity mid-stream (a host behind the
+    pool goes away) shrinks the live pool via the preemption-by-replay
+    path -- the batcher keeps serving at reduced capacity and the output
+    stream is token-identical to the dense reference, with the
+    degradation visible as a DegradedEvent."""
+    from repro.runtime.faults import FaultPlan, PoolShrink
+
+    cfg = reduce_for_smoke(get_config("qwen2-0.5b"))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    max_len = 32
+    reqs = [Request(rid=0, prompt=[7, 8, 9], max_new_tokens=16),
+            Request(rid=1, prompt=list(range(1, 9)), max_new_tokens=6)]
+    dense = ContinuousBatcher(model, params, slots=2, max_len=max_len)
+    want = dense.run(_clone(reqs))
+
+    paged = ContinuousBatcher(model, params, slots=2, max_len=max_len,
+                              kv_cache="paged", n_pages=9)
+    before = paged.pages.live_pages
+    inj = FaultPlan((PoolShrink(tick=4, live_pages=3),)).injector()
+    ring = obs.RingBufferSink(capacity=100_000)
+    with obs.session(ring):
+        got = paged.run(_clone(reqs), fault_injector=inj)
+    assert inj.log == [("pool_shrink", 4)]
+    assert paged.pages.live_pages == 3 < before
+    assert got == want                          # degradation is invisible
+    deg = [e for e in ring.events("degraded") if e.reason == "pool_shrink"]
+    assert len(deg) == 1
+    # Post-shrink accounting stays consistent on the shrunken pool, and
+    # the tick stream reports the *shrunken* live count.
+    assert paged.pages.free_pages == paged.pages.live_pages == 3
+    pool_events = ring.events("page_pool")
+    assert pool_events[-1].live_pages == 3
+    assert all(e.used_pages + e.free_pages == e.live_pages
+               for e in pool_events)
+
+
+def test_pool_shrink_requires_paged_cache():
+    cfg = reduce_for_smoke(get_config("qwen2-0.5b"))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    b = ContinuousBatcher(model, params, slots=2, max_len=16)
+    with pytest.raises(RuntimeError, match="paged"):
+        b.shrink_pool(3)
+
+
 def test_max_len_equals_padded_slots_end_to_end():
     """Regression: with max_len == padded_slots the old shape-guessed slot
     reset clobbered every tenant's KV rows on re-admission."""
